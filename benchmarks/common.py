@@ -1,0 +1,139 @@
+"""Shared experiment setup for the paper-figure benchmarks.
+
+One federated configuration (paper §4.1 scaled for a single CPU core —
+M/P/T reduced, same ratios: P = 10% of M, psi = P/2, Dir(0.1) label skew)
+is run once per strategy and cached in-process + on disk, so every
+table/figure benchmark reads the same runs, exactly as the paper derives
+Figs. 10-18 and Tables 3-4 from one experiment per method.
+
+Set REPRO_BENCH_SCALE=paper for the full M=100/P=10/T=100 configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.data import make_federated_classification
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import Dropout, FedAvg, Fedcom, Fedprox, PyramidFL, TimelyFL
+from repro.fl.rounds import FLResult
+from repro.models.cnn import MLPClassifier, param_count
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+class BenchConfig:
+    """The conflict regime matters: the ES mechanism needs local optima that
+    *persistently* disagree (paper: Dir(0.1) label skew + limited capacity).
+    With a too-easy task every method converges and no claim is testable —
+    hence high class overlap (noise=2.0), strong skew (alpha=0.05) and a
+    small MLP."""
+
+    def __init__(self):
+        scale = os.environ.get("REPRO_BENCH_SCALE", "quick")
+        if scale == "paper":
+            self.num_clients, self.p, self.t, self.epochs = 100, 10, 100, 5
+            self.samples, self.eval = 40_000, 4_000
+            self.explore_decay = 0.98
+        else:
+            self.num_clients, self.p, self.t, self.epochs = 30, 6, 50, 2
+            self.samples, self.eval = 12_000, 1_500
+            self.explore_decay = 0.95
+        self.alpha = 0.1
+        self.lr = 0.1
+        self.batch = 32
+        self.feature_dim = 16
+        self.classes = 10
+        self.noise = 1.6
+        self.harmful_fraction = 0.2  # paper Fig. 2: heavily-biased clients
+        self.seed = 0
+        # psi = 0.55*P: the paper's own adjustment when 0.5*P stops too early
+        # (their Google Speech setting, §4.3)
+        self.psi = round(0.55 * self.p, 1)
+
+
+_CACHE: Dict[str, FLResult] = {}
+_CFG: Optional[BenchConfig] = None
+_DS = None
+_MODEL = None
+_DIM = None
+
+
+def setup():
+    global _CFG, _DS, _MODEL, _DIM
+    if _CFG is None:
+        _CFG = BenchConfig()
+        _DS = make_federated_classification(
+            num_clients=_CFG.num_clients, alpha=_CFG.alpha, num_samples=_CFG.samples,
+            num_eval=_CFG.eval, feature_dim=_CFG.feature_dim, num_classes=_CFG.classes,
+            noise=_CFG.noise, harmful_fraction=_CFG.harmful_fraction, seed=_CFG.seed,
+        )
+        _MODEL = MLPClassifier(
+            feature_dim=_CFG.feature_dim, num_classes=_CFG.classes, hidden=(24,)
+        )
+        _DIM = param_count(_MODEL.init(jax.random.PRNGKey(0)))
+    return _CFG, _DS, _MODEL, _DIM
+
+
+def make_strategy(name: str, cfg: BenchConfig, dim: int, psi: Optional[float] = None):
+    args = (cfg.num_clients, cfg.p, cfg.epochs)
+    psi = cfg.psi if psi is None else psi
+    if name == "flrce":
+        return FLrce(*args, dim=dim, es_threshold=psi, explore_decay=cfg.explore_decay,
+                     seed=cfg.seed)
+    if name == "flrce_no_es":
+        return FLrce(*args, dim=dim, es_threshold=psi, explore_decay=cfg.explore_decay,
+                     use_early_stopping=False, seed=cfg.seed)
+    if name == "fedavg":
+        return FedAvg(*args, seed=cfg.seed)
+    if name == "fedcom":
+        return Fedcom(*args, seed=cfg.seed, keep_frac=0.1)
+    if name == "fedprox":
+        # epoch_fraction=0.6: the paper's accuracy-relaxation reading of
+        # FedProx (reduced local work + proximal term)
+        return Fedprox(*args, seed=cfg.seed, epoch_fraction=0.6)
+    if name == "dropout":
+        return Dropout(*args, seed=cfg.seed, keep_rate=0.5)
+    if name == "pyramidfl":
+        return PyramidFL(*args, seed=cfg.seed)
+    if name == "timelyfl":
+        return TimelyFL(*args, seed=cfg.seed)
+    raise KeyError(name)
+
+
+STRATEGIES = ["flrce", "flrce_no_es", "fedavg", "fedcom", "fedprox", "dropout",
+              "pyramidfl", "timelyfl"]
+
+
+def get_result(name: str, psi: Optional[float] = None) -> FLResult:
+    key = name if psi is None else f"{name}@psi={psi}"
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg, ds, model, dim = setup()
+    strat = make_strategy(name, cfg, dim, psi)
+    res = run_federated(
+        model, ds, strat, max_rounds=cfg.t, learning_rate=cfg.lr,
+        batch_size=cfg.batch, seed=cfg.seed,
+    )
+    _CACHE[key] = res
+    return res
+
+
+def dump_summary(path: str = None) -> dict:
+    path = path or os.path.join(RESULTS_DIR, "bench_fl_summary.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    out = {k: v.summary() for k, v in _CACHE.items()}
+    for k, v in _CACHE.items():
+        out[k]["curve"] = [round(float(a), 4) for a in v.accuracy_curve()]
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return out
+
+
+def csv_row(name: str, us_per_call: float, derived) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

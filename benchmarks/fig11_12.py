@@ -1,0 +1,33 @@
+"""Paper Fig. 11 + Fig. 12: overall energy (kJ) and computation efficiency
+(Eq. 8, normalized to the best baseline).
+
+Claim validated (C3a): FLrce has the lowest energy and >=30 % higher relative
+computation efficiency than every baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import STRATEGIES, csv_row, get_result
+
+
+def main() -> list:
+    rows = []
+    effs = {}
+    for name in STRATEGIES:
+        res = get_result(name)
+        effs[name] = res.computation_efficiency
+        rows.append(csv_row(
+            f"fig11_{name}", 0.0,
+            f"energy_kj={res.energy_kj:.4f};acc={res.final_accuracy:.4f}",
+        ))
+    best_baseline = max(v for k, v in effs.items() if k not in ("flrce", "flrce_no_es"))
+    for name in STRATEGIES:
+        rel = effs[name] / best_baseline
+        rows.append(csv_row(f"fig12_{name}", 0.0, f"rel_comp_eff={rel:.3f}"))
+    gain = effs["flrce"] / best_baseline - 1.0
+    rows.append(csv_row("fig12_flrce_gain_vs_best_baseline", 0.0,
+                        f"comp_eff_gain={gain * 100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

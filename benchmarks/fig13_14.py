@@ -1,0 +1,33 @@
+"""Paper Fig. 13 + Fig. 14: overall bandwidth usage (GB) and communication
+efficiency (Eq. 9, normalized).
+
+Claim validated (C3b): FLrce has (near-)lowest bandwidth usage and >=43 %
+higher relative communication efficiency than every baseline.
+"""
+from __future__ import annotations
+
+from benchmarks.common import STRATEGIES, csv_row, get_result
+
+
+def main() -> list:
+    rows = []
+    effs = {}
+    for name in STRATEGIES:
+        res = get_result(name)
+        effs[name] = res.communication_efficiency
+        rows.append(csv_row(
+            f"fig13_{name}", 0.0,
+            f"bytes_gb={res.bytes_gb:.5f};acc={res.final_accuracy:.4f}",
+        ))
+    best_baseline = max(v for k, v in effs.items() if k not in ("flrce", "flrce_no_es"))
+    for name in STRATEGIES:
+        rows.append(csv_row(f"fig14_{name}", 0.0,
+                            f"rel_comm_eff={effs[name] / best_baseline:.3f}"))
+    gain = effs["flrce"] / best_baseline - 1.0
+    rows.append(csv_row("fig14_flrce_gain_vs_best_baseline", 0.0,
+                        f"comm_eff_gain={gain * 100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

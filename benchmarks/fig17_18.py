@@ -1,0 +1,35 @@
+"""Paper Figs. 17-18: FLrce vs FLrce w/o early stopping.
+
+Claim validated (C2): ES cuts the resource bill roughly in proportion to the
+saved rounds at marginal accuracy cost (the w/o-ES arm's efficiency is a
+fraction of FLrce's).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, get_result
+
+
+def main() -> list:
+    rows = []
+    es = get_result("flrce")
+    no = get_result("flrce_no_es")
+    rows.append(csv_row("fig17_flrce", 0.0,
+                        f"acc={es.final_accuracy:.4f};rounds={es.rounds_run};"
+                        f"energy_kj={es.energy_kj:.4f}"))
+    rows.append(csv_row("fig17_flrce_no_es", 0.0,
+                        f"acc={no.final_accuracy:.4f};rounds={no.rounds_run};"
+                        f"energy_kj={no.energy_kj:.4f}"))
+    if es.stopped_early:
+        acc_delta = es.final_accuracy - no.final_accuracy
+        eff_ratio_comp = no.computation_efficiency / max(es.computation_efficiency, 1e-12)
+        eff_ratio_comm = no.communication_efficiency / max(es.communication_efficiency, 1e-12)
+        rows.append(csv_row("fig17_es_accuracy_delta", 0.0, f"delta={acc_delta:+.4f}"))
+        rows.append(csv_row("fig17_noes_rel_comp_eff", 0.0, f"ratio={eff_ratio_comp:.3f}"))
+        rows.append(csv_row("fig18_noes_rel_comm_eff", 0.0, f"ratio={eff_ratio_comm:.3f}"))
+    else:
+        rows.append(csv_row("fig17_es_not_triggered", 0.0, "es_round=N/A"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

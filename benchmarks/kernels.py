@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: us/call for every Pallas kernel (interpret mode on
+CPU — numbers are algorithm-path timings, not TPU wall times) and the
+equivalent jnp oracle for reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    p, d = 10, 500_000
+    u = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    wt = jnp.asarray(rng.dirichlet(np.ones(p)), jnp.float32)
+
+    rows.append(csv_row("kernel_gram_pallas", _time(ops.gram, u), f"P={p},D={d}"))
+    rows.append(csv_row("kernel_gram_ref", _time(jax.jit(ref.gram_ref), u), f"P={p},D={d}"))
+    rows.append(csv_row("kernel_aggregate_pallas", _time(ops.weighted_aggregate, w, u, wt), f"P={p},D={d}"))
+    rows.append(csv_row("kernel_aggregate_ref", _time(jax.jit(ref.weighted_aggregate_ref), w, u, wt), f"P={p},D={d}"))
+    rows.append(csv_row("kernel_topk_pallas", _time(lambda x: ops.topk_mask(x, keep_frac=0.1), w), f"D={d},keep=0.1"))
+
+    b, h, kv, hd, s = 4, 16, 4, 128, 4096
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.bfloat16)
+    ln = jnp.full((b,), s, jnp.int32)
+    rows.append(csv_row("kernel_decode_attn_pallas",
+                        _time(ops.decode_attention, q, kc, vc, ln),
+                        f"B={b},H={h},KV={kv},S={s}"))
+    rows.append(csv_row("kernel_decode_attn_ref",
+                        _time(jax.jit(ref.decode_attention_ref), q, kc, vc, ln),
+                        f"B={b},H={h},KV={kv},S={s}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

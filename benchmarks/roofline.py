@@ -1,0 +1,47 @@
+"""Roofline table from the dry-run JSONs (deliverable g).
+
+Reads results/dryrun/*.json produced by ``python -m repro.launch.dryrun`` and
+prints one row per (arch x shape x mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def main() -> list:
+    rows = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [csv_row("roofline_missing", 0.0,
+                        "run `python -m repro.launch.dryrun --all` first")]
+    for path in files:
+        with open(path) as f:
+            d = json.load(f)
+        name = os.path.basename(path)[:-5]
+        if "skipped" in d:
+            rows.append(csv_row(f"roofline_{name}", 0.0, f"SKIP:{d['skipped']}"))
+            continue
+        r = d.get("roofline", {})
+        if not r:
+            rows.append(csv_row(f"roofline_{name}", 0.0, "no-roofline"))
+            continue
+        step_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        rows.append(csv_row(
+            f"roofline_{name}", step_us,
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};bottleneck={r['bottleneck']};"
+            f"useful_flops_frac={r['useful_flops_fraction']:.3f};"
+            f"hbm_gib_dev={r.get('peak_hbm_gib_per_device') or 0:.2f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,derived``
+CSV rows for: Table 3 / Fig. 10 (accuracy & rounds), Figs. 11-12 (energy +
+computation efficiency), Figs. 13-14 (bandwidth + communication efficiency),
+Table 4 / Figs. 15-16 (psi sweep), Figs. 17-18 (ES ablation), kernel
+micro-benches, and the dry-run roofline table.
+
+Env:
+  REPRO_BENCH_SCALE=paper   full M=100/P=10/T=100 configuration (slow)
+  REPRO_BENCH_ONLY=fig10_table3,kernels   run a subset
+"""
+from __future__ import annotations
+
+import os
+import time
+
+
+def main() -> None:
+    from benchmarks import fig10_table3, fig11_12, fig13_14, fig17_18, kernels, roofline, table4
+    from benchmarks.common import dump_summary
+
+    modules = {
+        "fig10_table3": fig10_table3,
+        "fig11_12": fig11_12,
+        "fig13_14": fig13_14,
+        "table4": table4,
+        "fig17_18": fig17_18,
+        "kernels": kernels,
+        "roofline": roofline,
+    }
+    only = os.environ.get("REPRO_BENCH_ONLY")
+    if only:
+        wanted = [w.strip() for w in only.split(",")]
+        modules = {k: v for k, v in modules.items() if k in wanted}
+
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        t0 = time.time()
+        for row in mod.main():
+            print(row)
+        print(f"_bench_module_{name},{(time.time() - t0) * 1e6:.0f},wall")
+    try:
+        dump_summary()
+    except Exception:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 4 + Figs. 15-16: effect of the early-stopping threshold psi.
+
+Claim validated (C4): small psi stops too early at low accuracy; large psi
+fails to trigger before T; psi ~ P/2 maximizes efficiency.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, get_result, setup
+
+
+def main() -> list:
+    cfg, _, _, _ = setup()
+    rows = []
+    for frac in (0.3, 0.45, 0.5, 0.55, 0.65, 0.9):
+        psi = round(frac * cfg.p, 2)
+        res = get_result("flrce", psi=psi)
+        stopped = res.stopped_early
+        rows.append(csv_row(
+            f"table4_psi_{psi}", 0.0,
+            f"acc={res.final_accuracy:.4f};es_round={res.rounds_run if stopped else 'N/A'};"
+            f"eff={res.final_accuracy / max(1, res.rounds_run):.5f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

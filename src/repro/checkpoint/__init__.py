@@ -1,0 +1,9 @@
+"""Checkpointing: npz-based pytree + FLrce server-state save/restore."""
+from repro.checkpoint.checkpoint import (
+    restore_pytree,
+    restore_server_state,
+    save_pytree,
+    save_server_state,
+)
+
+__all__ = ["restore_pytree", "restore_server_state", "save_pytree", "save_server_state"]

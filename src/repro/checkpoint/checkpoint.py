@@ -1,0 +1,91 @@
+"""Pytree checkpointing over npz, with key-path flattening.
+
+``save_pytree``/``restore_pytree`` round-trip any pytree of arrays whose
+structure is available at restore time (restore takes a template).  The FLrce
+server state (Ω, H, V, A, R, t) has a dedicated pair so a stopped job can be
+resumed bit-exactly — including the relationship map, which is the expensive
+thing to re-learn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.server import FLrceState
+
+PyTree = Any
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten_with_paths(tree))
+
+
+def restore_pytree(path: str, template: PyTree) -> PyTree:
+    with np.load(path, allow_pickle=False) as data:
+        stored = dict(data)
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = "/".join(str(x) for x in p)
+        if key not in stored:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = stored[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def save_server_state(path: str, state: FLrceState) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(
+        path,
+        omega=np.asarray(state.omega),
+        heuristic=np.asarray(state.heuristic),
+        updates=np.asarray(state.updates),
+        anchors=np.asarray(state.anchors),
+        last_round=np.asarray(state.last_round),
+    )
+    meta = {
+        "t": int(state.t),
+        "stopped": bool(state.stopped),
+        "stop_round": state.stop_round,
+        "last_conflicts": float(state.last_conflicts),
+    }
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore_server_state(path: str) -> FLrceState:
+    import jax.numpy as jnp
+
+    with np.load(path) as data:
+        arrays = {k: jnp.asarray(v) for k, v in data.items()}
+    with open(path + ".meta.json") as f:
+        meta = json.load(f)
+    return FLrceState(
+        t=meta["t"],
+        omega=arrays["omega"],
+        heuristic=arrays["heuristic"],
+        updates=arrays["updates"],
+        anchors=arrays["anchors"],
+        last_round=arrays["last_round"],
+        stopped=meta["stopped"],
+        stop_round=meta["stop_round"],
+        last_conflicts=meta["last_conflicts"],
+    )

@@ -1,0 +1,29 @@
+"""phi-3-vision-4.2b — VLM: phi3-mini backbone + CLIP frontend (stubbed).
+
+[hf:microsoft/Phi-3-vision-128k-instruct]: 32L d_model=3072 32H (kv=32)
+d_ff=8192 vocab=32064.  The CLIP-ViT image encoder + projector is a STUB per
+the task carve-out: ``input_specs`` provides 576 precomputed patch-embedding
+tokens of width d_model prepended to the text sequence.
+"""
+from repro.configs.base import ATTN_GLOBAL, ArchConfig
+
+
+def make_config() -> ArchConfig:
+    return ArchConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32_064,
+        pattern=(ATTN_GLOBAL,),
+        norm="rmsnorm",
+        act="silu",
+        gated_mlp=True,
+        rope_theta=10_000.0,
+        max_position=131_072,
+        image_tokens=576,  # one 336x336 crop at patch 14 => 24*24 tokens
+        citation="hf:microsoft/Phi-3-vision-128k-instruct (phi3-mini + CLIP)",
+    )

@@ -1,0 +1,30 @@
+"""whisper-medium — audio encoder-decoder; conv frontend stubbed.
+
+[arXiv:2212.04356]: 24L decoder (and 24L encoder) d_model=1024 16H d_ff=4096
+vocab=51865.  The mel-spectrogram + 2-conv frontend is a STUB per the task
+carve-out: ``input_specs`` provides 1500 precomputed frame embeddings of
+width d_model for the encoder.
+"""
+from repro.configs.base import ATTN_GLOBAL, ArchConfig
+
+
+def make_config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-medium",
+        family="audio",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=4096,
+        vocab_size=51_865,
+        pattern=(ATTN_GLOBAL,),
+        norm="layernorm",
+        act="gelu",
+        gated_mlp=False,
+        qkv_bias=True,
+        encoder_layers=24,
+        encoder_frames=1500,
+        max_position=448,  # real model cap; framework stress shapes noted in DESIGN.md
+        citation="arXiv:2212.04356 (Whisper medium, enc-dec, conv frontend stub)",
+    )

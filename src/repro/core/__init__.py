@@ -1,0 +1,31 @@
+"""FLrce core: the paper's contribution (relationship-based selection + ES)."""
+from repro.core.early_stopping import ESDecision, conflict_degree, should_stop
+from repro.core.heuristics import heuristic_from_omega, update_heuristic_rows
+from repro.core.relationship import (
+    async_relationship,
+    cossim,
+    orthdist,
+    relationship_row,
+    sync_relationship,
+)
+from repro.core.selection import explore_probability, select_clients, top_p_by_heuristic
+from repro.core.server import FLrceServer, FLrceState, init_state
+
+__all__ = [
+    "ESDecision",
+    "conflict_degree",
+    "should_stop",
+    "heuristic_from_omega",
+    "update_heuristic_rows",
+    "async_relationship",
+    "cossim",
+    "orthdist",
+    "relationship_row",
+    "sync_relationship",
+    "explore_probability",
+    "select_clients",
+    "top_p_by_heuristic",
+    "FLrceServer",
+    "FLrceState",
+    "init_state",
+]

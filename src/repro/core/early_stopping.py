@@ -1,0 +1,51 @@
+"""Early-stopping criterion ES (paper §3.3, Algorithm 3).
+
+On exploit rounds the server counts *ordered* conflicting pairs — Algorithm 3
+double-counts each unordered pair via its nested loops — among the selected
+clients' fresh updates, normalizes by P, and stops when the average number of
+conflicting peers per selected client reaches the threshold ψ.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+class ESDecision(NamedTuple):
+    stop: bool
+    conflicts: float          # average conflicting peers per selected client
+    conflict_pairs: int       # ordered conflicting pairs
+
+
+def conflict_degree(updates: jax.Array) -> jax.Array:
+    """Average number of conflicting peers per client for (P, D) updates.
+
+    conflicts = (1/P) * |{(k, j) : k != j, cossim(u_k, u_j) < 0}|
+    """
+    u = updates.astype(jnp.float32)
+    norms = jnp.maximum(jnp.linalg.norm(u, axis=1, keepdims=True), _EPS)
+    un = u / norms
+    gram = un @ un.T
+    p = updates.shape[0]
+    mask = 1.0 - jnp.eye(p, dtype=gram.dtype)
+    neg = (gram < 0.0).astype(jnp.float32) * mask
+    return jnp.sum(neg) / p
+
+
+def should_stop(
+    updates: jax.Array,
+    psi: float,
+    *,
+    is_exploit_round: bool,
+) -> ESDecision:
+    """Algorithm 3.  ``updates``: (P, D) fresh updates of the selected clients."""
+    if not is_exploit_round:
+        return ESDecision(stop=False, conflicts=0.0, conflict_pairs=0)
+    avg = conflict_degree(updates)
+    p = updates.shape[0]
+    pairs = int(round(float(avg) * p))
+    return ESDecision(stop=bool(avg >= psi), conflicts=float(avg), conflict_pairs=pairs)

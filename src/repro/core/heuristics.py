@@ -1,0 +1,22 @@
+"""Heuristic values (paper Eq. 7): importance = row-sum of the relationship map."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def heuristic_from_omega(omega: jax.Array) -> jax.Array:
+    """H[k] = sum_{j != k} Ω[k, j]  (Eq. 7).
+
+    The diagonal is excluded explicitly so a client's self-relationship can
+    never inflate its importance.
+    """
+    m = omega.shape[0]
+    off_diag = omega * (1.0 - jnp.eye(m, dtype=omega.dtype))
+    return jnp.sum(off_diag, axis=1)
+
+
+def update_heuristic_rows(h: jax.Array, omega: jax.Array, rows: jax.Array) -> jax.Array:
+    """Recompute H only for the given client rows (Alg. 4 line 17)."""
+    fresh = heuristic_from_omega(omega)
+    return h.at[rows].set(fresh[rows])

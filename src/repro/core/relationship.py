@@ -1,0 +1,120 @@
+"""Relationship modeling (paper §3.2, Algorithm 1).
+
+Two estimators of the pairwise client relationship degree Ω[p, q] ∈ [-1, 1]:
+
+* **Synchronous RM** — both updates are fresh (``R[j] >= t - 1``):
+  ``Ω[p,q] = cossim(u_p, u_q)``                                  (Eq. 5)
+
+* **Asynchronous RM** — client q's stored update is stale:
+  ``Ω[p,q] = max(1 - orthdist(w_t + u_p, ray_q) / orthdist(w_t, ray_q), -1)``
+                                                                  (Eq. 6)
+  where ``ray_q`` is the ray from the anchor point ``a_q`` (the global model
+  at the round q's update was produced) along ``u_q``.  The paper's Figure 8
+  anchors the update at ``w^{t-m}``; the update map therefore stores
+  ``(anchor, update)`` pairs — an implementation detail the paper leaves
+  implicit but which is required for ``orthdist`` to be well defined.
+
+All functions are pure and jit-compatible; they operate on flattened update
+vectors.  ``core.distributed`` provides mesh-sharded equivalents built on the
+same math via a Gram matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-12
+
+
+def cossim(u: jax.Array, v: jax.Array) -> jax.Array:
+    """Cosine similarity between two flattened update vectors (Eq. 5)."""
+    u = u.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    dot = jnp.vdot(u, v)
+    nu = jnp.linalg.norm(u)
+    nv = jnp.linalg.norm(v)
+    return dot / jnp.maximum(nu * nv, _EPS)
+
+
+def orthdist(x: jax.Array, anchor: jax.Array, direction: jax.Array) -> jax.Array:
+    """Orthogonal distance from point ``x`` to the ray ``anchor + s*direction``.
+
+    ``orthdist = || (x - a) - proj_dir(x - a) ||_2``  (paper Fig. 8).
+    """
+    x = x.astype(jnp.float32)
+    rel = x - anchor.astype(jnp.float32)
+    d = direction.astype(jnp.float32)
+    denom = jnp.maximum(jnp.vdot(d, d), _EPS)
+    proj = (jnp.vdot(rel, d) / denom) * d
+    return jnp.linalg.norm(rel - proj)
+
+
+def async_relationship(
+    w_t: jax.Array,
+    u_p: jax.Array,
+    anchor_q: jax.Array,
+    u_q: jax.Array,
+) -> jax.Array:
+    """Asynchronous relationship degree (Eq. 6), clipped to [-1, 1].
+
+    Positive when incorporating ``u_p`` moves the global model towards
+    client q's (approximate) local optimum ray; negative when away.
+    """
+    d_o = orthdist(w_t, anchor_q, u_q)
+    d_p = orthdist(w_t + u_p.astype(jnp.float32), anchor_q, u_q)
+    ratio = d_p / jnp.maximum(d_o, _EPS)
+    return jnp.clip(1.0 - ratio, -1.0, 1.0)
+
+
+def sync_relationship(u_p: jax.Array, u_q: jax.Array) -> jax.Array:
+    """Synchronous relationship degree (Eq. 5) — cosine similarity."""
+    return cossim(u_p, u_q)
+
+
+def relationship_row(
+    k: int,
+    u_k: jax.Array,
+    w_t: jax.Array,
+    updates: jax.Array,       # (M, D) update map V
+    anchors: jax.Array,       # (M, D) anchor map A (global model at R[j])
+    last_rounds: jax.Array,   # (M,) time map R; -1 = never seen
+    t: int,
+    omega_row: jax.Array,     # (M,) previous Ω[k, :]
+) -> jax.Array:
+    """Algorithm 1: recompute row k of Ω against every other client.
+
+    Clients never seen (``R[j] < 0``) keep their previous Ω entry.
+    Vectorized over j; jit-compatible (k and t may be traced).
+    """
+    m = updates.shape[0]
+    u_k32 = u_k.astype(jnp.float32)
+    upd32 = updates.astype(jnp.float32)
+
+    # --- synchronous: cossim(V[j], u_k) -----------------------------------
+    dots = upd32 @ u_k32
+    norms = jnp.linalg.norm(upd32, axis=1)
+    nk = jnp.linalg.norm(u_k32)
+    sync = dots / jnp.maximum(norms * nk, _EPS)
+
+    # --- asynchronous: Eq. 6 ----------------------------------------------
+    w32 = w_t.astype(jnp.float32)
+    rel_before = w32[None, :] - anchors.astype(jnp.float32)       # (M, D)
+    rel_after = rel_before + u_k32[None, :]
+    vv = jnp.maximum(jnp.sum(upd32 * upd32, axis=1), _EPS)        # (M,)
+
+    def _orth(rel):
+        coef = jnp.sum(rel * upd32, axis=1) / vv                  # (M,)
+        perp = rel - coef[:, None] * upd32
+        return jnp.linalg.norm(perp, axis=1)
+
+    d_o = _orth(rel_before)
+    d_p = _orth(rel_after)
+    asyncr = jnp.clip(1.0 - d_p / jnp.maximum(d_o, _EPS), -1.0, 1.0)
+
+    fresh = last_rounds >= (t - 1)
+    seen = last_rounds >= 0
+    row = jnp.where(fresh, sync, asyncr)
+    row = jnp.where(seen, row, omega_row)
+    # Ω[k, k] stays at its previous value (self-relationship excluded, Eq. 7)
+    row = row.at[k].set(omega_row[k])
+    return row

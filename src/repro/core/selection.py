@@ -1,0 +1,52 @@
+"""Client selection strategy h (paper §3.2, Algorithm 2).
+
+Explore-exploit: with probability ``phi_t = decay**t`` the server explores
+(uniform sample of P clients without replacement); otherwise it exploits by
+picking the top-P clients by heuristic value.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def explore_probability(t: int, decay: float = 0.98) -> float:
+    """phi_t: 1.0 at t=0, decaying by ``decay`` each round (paper §4.1)."""
+    return float(decay) ** int(t)
+
+
+def select_clients(
+    rng: jax.Array,
+    heuristic: jax.Array,
+    t: int,
+    p: int,
+    decay: float = 0.98,
+) -> Tuple[jax.Array, bool]:
+    """Algorithm 2.  Returns (selected ids (p,), exploited: bool).
+
+    Exploit rounds sort by heuristic descending and take the first P
+    (ties broken by client id, matching ``sorted(..., key=H, reverse=True)``
+    stability in the paper's pseudo-code).
+    """
+    m = heuristic.shape[0]
+    if p > m:
+        raise ValueError(f"cannot select P={p} from M={m} clients")
+    rng_flip, rng_perm = jax.random.split(rng)
+    phi = explore_probability(t, decay)
+    explore = bool(jax.random.uniform(rng_flip) < phi)
+    if explore:
+        ids = jax.random.choice(rng_perm, m, shape=(p,), replace=False)
+        return jnp.sort(ids), False
+    # stable top-P: sort by (-H, id)
+    order = np.lexsort((np.arange(m), -np.asarray(heuristic)))
+    return jnp.asarray(np.sort(order[:p])), True
+
+
+def top_p_by_heuristic(heuristic: jax.Array, p: int) -> jax.Array:
+    """Pure exploit selection (used by tests and the ES analysis)."""
+    m = heuristic.shape[0]
+    order = np.lexsort((np.arange(m), -np.asarray(heuristic)))
+    return jnp.asarray(np.sort(order[:p]))

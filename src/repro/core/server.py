@@ -1,0 +1,140 @@
+"""FLrce server (paper Algorithm 4) — stateful orchestration of one FL job.
+
+The server operates on *flattened* update vectors; the FL engine
+(`repro.fl.rounds`) flattens/unflattens model pytrees at the boundary.
+State carried across rounds (Table 1):
+
+* ``omega`` (M, M) — relationship map Ω
+* ``heuristic`` (M,) — H, row-sums of Ω (Eq. 7)
+* ``updates`` (M, D) — V, each client's latest update
+* ``anchors`` (M, D) — global model at each client's last active round
+  (needed to anchor the orthdist ray; see core.relationship)
+* ``last_round`` (M,) — R, each client's last active round (-1 = never)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import early_stopping, heuristics, relationship, selection
+
+
+@dataclasses.dataclass
+class FLrceState:
+    t: int
+    omega: jax.Array        # (M, M)
+    heuristic: jax.Array    # (M,)
+    updates: jax.Array      # (M, D)
+    anchors: jax.Array      # (M, D)
+    last_round: jax.Array   # (M,) int32
+    stopped: bool = False
+    stop_round: Optional[int] = None
+    last_conflicts: float = 0.0
+
+
+def init_state(num_clients: int, dim: int) -> FLrceState:
+    m = num_clients
+    return FLrceState(
+        t=0,
+        omega=jnp.zeros((m, m), jnp.float32),
+        heuristic=jnp.zeros((m,), jnp.float32),
+        updates=jnp.zeros((m, dim), jnp.float32),
+        anchors=jnp.zeros((m, dim), jnp.float32),
+        last_round=jnp.full((m,), -1, jnp.int32),
+    )
+
+
+class FLrceServer:
+    """Relationship-based selection + early stopping, over flattened updates."""
+
+    def __init__(
+        self,
+        num_clients: int,
+        dim: int,
+        clients_per_round: int,
+        es_threshold: float,
+        explore_decay: float = 0.98,
+        seed: int = 0,
+    ):
+        self.m = num_clients
+        self.p = clients_per_round
+        self.psi = es_threshold
+        self.decay = explore_decay
+        self._rng = jax.random.PRNGKey(seed)
+        self.state = init_state(num_clients, dim)
+        self._last_exploit = False
+
+    # -- Alg. 4 line 5: client selection ------------------------------------
+    def select(self) -> np.ndarray:
+        self._rng, sub = jax.random.split(self._rng)
+        ids, exploited = selection.select_clients(
+            sub, self.state.heuristic, self.state.t, self.p, self.decay
+        )
+        self._last_exploit = exploited
+        return np.asarray(ids)
+
+    @property
+    def last_round_was_exploit(self) -> bool:
+        return self._last_exploit
+
+    # -- Alg. 4 lines 9-19: ingest updates, refresh Ω and H ------------------
+    def ingest(
+        self,
+        w_t: jax.Array,
+        client_ids: Sequence[int],
+        client_updates: jax.Array,  # (P, D)
+    ) -> None:
+        st = self.state
+        t = st.t
+        ids = np.asarray(client_ids)
+        # write V/A/R *after* relationship modeling uses the previous maps for
+        # asynchronous comparisons, but Alg. 4 writes V/R first (line 10) so a
+        # pair selected in the same round is compared synchronously.  We follow
+        # Alg. 4: write first, then model relationships.
+        updates = st.updates.at[ids].set(client_updates.astype(jnp.float32))
+        anchors = st.anchors.at[ids].set(w_t.astype(jnp.float32)[None, :])
+        last_round = st.last_round.at[ids].set(t)
+
+        omega = st.omega
+        for pos, k in enumerate(ids):
+            row = relationship.relationship_row(
+                int(k),
+                client_updates[pos],
+                w_t,
+                updates,
+                anchors,
+                last_round,
+                t,
+                omega[int(k)],
+            )
+            omega = omega.at[int(k)].set(row)
+        heuristic = heuristics.update_heuristic_rows(st.heuristic, omega, jnp.asarray(ids))
+        self.state = dataclasses.replace(
+            st,
+            omega=omega,
+            heuristic=heuristic,
+            updates=updates,
+            anchors=anchors,
+            last_round=last_round,
+        )
+
+    # -- Alg. 4 lines 20-23: early stopping ---------------------------------
+    def check_early_stop(self, selected_updates: jax.Array) -> bool:
+        decision = early_stopping.should_stop(
+            selected_updates, self.psi, is_exploit_round=self._last_exploit
+        )
+        st = self.state
+        self.state = dataclasses.replace(
+            st,
+            stopped=st.stopped or decision.stop,
+            stop_round=st.stop_round if st.stopped else (st.t if decision.stop else None),
+            last_conflicts=decision.conflicts,
+        )
+        return decision.stop
+
+    def advance_round(self) -> None:
+        self.state = dataclasses.replace(self.state, t=self.state.t + 1)

@@ -1,0 +1,27 @@
+"""Data substrate: Dirichlet non-iid partitioning + synthetic federated sets."""
+from repro.data.loader import epoch_batches, num_batches
+from repro.data.partition import (
+    dirichlet_label_partition,
+    dirichlet_quantity_partition,
+    partition_stats,
+)
+from repro.data.synthetic import (
+    FederatedDataset,
+    make_classification,
+    make_federated_classification,
+    make_image_like,
+)
+from repro.data.tokens import SiloTokenStream
+
+__all__ = [
+    "epoch_batches",
+    "num_batches",
+    "dirichlet_label_partition",
+    "dirichlet_quantity_partition",
+    "partition_stats",
+    "FederatedDataset",
+    "make_classification",
+    "make_federated_classification",
+    "make_image_like",
+    "SiloTokenStream",
+]

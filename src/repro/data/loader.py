@@ -1,0 +1,28 @@
+"""Minimal batching pipeline over in-memory client shards."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def epoch_batches(
+    x: np.ndarray,
+    y: np.ndarray,
+    batch_size: int,
+    rng: np.random.Generator,
+    drop_remainder: bool = False,
+) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Shuffled mini-batches for one local epoch."""
+    n = len(x)
+    order = rng.permutation(n)
+    stop = (n // batch_size) * batch_size if drop_remainder else n
+    for start in range(0, max(stop, min(n, batch_size)), batch_size):
+        ix = order[start : start + batch_size]
+        if len(ix) == 0:
+            break
+        yield x[ix], y[ix]
+
+
+def num_batches(n: int, batch_size: int, drop_remainder: bool = False) -> int:
+    return n // batch_size if drop_remainder else -(-n // batch_size)

@@ -1,0 +1,22 @@
+"""Federated-learning substrate: engine, strategies, metrics."""
+from repro.fl.aggregation import aggregate, aggregation_weights
+from repro.fl.client import ClientTrainer
+from repro.fl.flrce import FLrce
+from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
+from repro.fl.rounds import FLResult, RoundRecord, run_federated
+from repro.fl.strategy import LocalConfig, Strategy
+
+__all__ = [
+    "aggregate",
+    "aggregation_weights",
+    "ClientTrainer",
+    "FLrce",
+    "ResourceLedger",
+    "communication_efficiency",
+    "computation_efficiency",
+    "FLResult",
+    "RoundRecord",
+    "run_federated",
+    "LocalConfig",
+    "Strategy",
+]

@@ -1,0 +1,33 @@
+"""Server-side aggregation (paper Eq. 4): sample-count-weighted average of updates."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def aggregation_weights(sample_counts: Sequence[float]) -> np.ndarray:
+    """p_k = n_k / sum n_{k'} over the selected clients (Eq. 4)."""
+    n = np.asarray(sample_counts, dtype=np.float64)
+    total = n.sum()
+    if total <= 0:
+        return np.full(len(n), 1.0 / max(1, len(n)))
+    return (n / total).astype(np.float32)
+
+
+def aggregate(w: PyTree, updates: List[PyTree], weights: np.ndarray) -> PyTree:
+    """w_{t+1} = w_t + Σ p_k u_k, leafwise."""
+    if len(updates) != len(weights):
+        raise ValueError("updates/weights length mismatch")
+
+    def combine(w_leaf, *u_leaves):
+        acc = jnp.zeros_like(w_leaf, dtype=jnp.float32)
+        for p_k, u in zip(weights, u_leaves):
+            acc = acc + jnp.asarray(p_k, jnp.float32) * u.astype(jnp.float32)
+        return (w_leaf.astype(jnp.float32) + acc).astype(w_leaf.dtype)
+
+    return jax.tree_util.tree_map(combine, w, *updates)

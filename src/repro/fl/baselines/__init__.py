@@ -1,0 +1,10 @@
+"""Baseline efficient-FL strategies the paper compares against (§4.1)."""
+from repro.fl.baselines.fedavg import FedAvg
+from repro.fl.baselines.fedcom import Fedcom
+from repro.fl.baselines.fedprox import Fedprox
+from repro.fl.baselines.dropout import Dropout
+from repro.fl.baselines.pyramidfl import PyramidFL
+from repro.fl.baselines.quantized import QuantizedFL
+from repro.fl.baselines.timelyfl import TimelyFL
+
+__all__ = ["FedAvg", "Fedcom", "Fedprox", "Dropout", "PyramidFL", "QuantizedFL", "TimelyFL"]

@@ -1,0 +1,43 @@
+"""Federated Dropout [25]: clients train a random sub-model.
+
+Each round each client receives a Bernoulli(keep_rate) mask over the weight
+elements; masked entries are neither trained nor transmitted, so both
+directions of communication scale with ``keep_rate``.  Computation is NOT
+reduced (paper §4.5.3: width-wise dropout does not shorten the backward
+graph), which our ledger reproduces with ``compute_fraction=1.0``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.strategy import LocalConfig, Strategy
+
+
+class Dropout(Strategy):
+    name = "dropout"
+
+    def __init__(self, *args, keep_rate: float = 0.5, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.keep_rate = keep_rate
+        self._mask_seed = 0
+
+    def client_config(self, t: int, cid: int, global_params) -> LocalConfig:
+        self._mask_seed += 1
+        rng = np.random.default_rng(hash((self._mask_seed, cid, t)) % (2**32))
+
+        def leaf_mask(leaf):
+            if leaf.ndim < 2:  # keep biases/norms intact (they're cheap)
+                return jnp.ones_like(leaf)
+            m = rng.random(leaf.shape) < self.keep_rate
+            return jnp.asarray(m, leaf.dtype)
+
+        mask = jax.tree_util.tree_map(leaf_mask, global_params)
+        return LocalConfig(
+            epochs=self.epochs,
+            mask=mask,
+            compute_fraction=1.0,               # paper §4.5.3
+            download_fraction=self.keep_rate,
+            upload_fraction=self.keep_rate,
+        )

@@ -1,0 +1,6 @@
+"""FedAvg [3]: the unmodified base strategy (also `FLrce w/o selection+ES`)."""
+from repro.fl.strategy import Strategy
+
+
+class FedAvg(Strategy):
+    name = "fedavg"

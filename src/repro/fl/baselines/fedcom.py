@@ -1,0 +1,36 @@
+"""Fedcom [16]: clients compress parameter updates before upload.
+
+Implemented as block-local magnitude top-k sparsification via the
+``kernels.topk_mask`` Pallas kernel (value+index transport => upload fraction
+= 2 * keep_frac).  Download remains full-model, computation is unchanged —
+exactly the trade-off profile the paper attributes to message compression.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.fl.strategy import Strategy
+from repro.kernels import ops as kops
+
+
+class Fedcom(Strategy):
+    name = "fedcom"
+
+    def __init__(self, *args, keep_frac: float = 0.1, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.keep_frac = keep_frac
+
+    def process_update(self, cid: int, update) -> Tuple[object, float]:
+        leaves, treedef = jax.tree_util.tree_flatten(update)
+        flat = np.concatenate([np.ravel(np.asarray(l)) for l in leaves]).astype(np.float32)
+        masked = np.asarray(kops.topk_mask(flat, keep_frac=self.keep_frac))
+        out, off = [], 0
+        for l in leaves:
+            size = int(np.prod(l.shape))
+            out.append(masked[off : off + size].reshape(l.shape).astype(l.dtype))
+            off += size
+        # values + indices => 2x the kept fraction in bytes
+        return jax.tree_util.tree_unflatten(treedef, out), 2.0 * self.keep_frac

@@ -1,0 +1,44 @@
+"""QuantizedFL: 8-bit stochastic uniform quantization of updates (paper
+refs [19] Dettmers / [20] QSGD — the other message-compression family the
+paper groups with Fedcom).
+
+Per-leaf symmetric quantization: q = round(u / scale) with
+scale = max|u| / 127; upload = int8 payload + one fp32 scale per leaf
+(=> upload fraction ~= 0.25).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.strategy import Strategy
+
+
+def quantize_dequantize(u: jax.Array, rng: np.random.Generator, bits: int = 8) -> jax.Array:
+    levels = 2 ** (bits - 1) - 1
+    arr = np.asarray(u, np.float32)
+    scale = np.max(np.abs(arr)) / levels if arr.size else 1.0
+    if scale <= 0:
+        return u
+    scaled = arr / scale
+    floor = np.floor(scaled)
+    frac = scaled - floor
+    q = floor + (rng.random(arr.shape) < frac)  # stochastic rounding
+    q = np.clip(q, -levels - 1, levels)
+    return jnp.asarray((q * scale).astype(np.float32), dtype=u.dtype)
+
+
+class QuantizedFL(Strategy):
+    name = "quantized8"
+
+    def __init__(self, *args, bits: int = 8, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.bits = bits
+
+    def process_update(self, cid: int, update) -> Tuple[object, float]:
+        rng = np.random.default_rng(hash((cid, self.bits)) % (2**32))
+        out = jax.tree_util.tree_map(lambda l: quantize_dequantize(l, rng, self.bits), update)
+        return out, self.bits / 32.0

@@ -1,0 +1,126 @@
+"""Client-side local training (paper Eq. 3, Alg. 4 'Locally' block).
+
+A :class:`ClientTrainer` jits one SGD step per (model, variant) and reuses it
+across all clients and rounds.  Variants cover the baselines' local tweaks:
+
+* ``prox_mu``       — Fedprox proximal term  µ/2‖w − w_global‖²
+* ``mask``          — Dropout sub-model training (masked params/grads)
+* ``freeze_frac``   — TimelyFL layer freezing (earlier fraction of leaves frozen)
+
+The returned *update* is ``w_local − w_global`` accumulated over all local
+epochs, matching the paper's u_k (the aggregate of E epochs of SGD).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import epoch_batches
+
+PyTree = Any
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_mul(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def _freeze_mask(params: PyTree, freeze_frac: float) -> PyTree:
+    """1.0 for trainable leaves, 0.0 for the frozen prefix (layer freezing)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    n = len(leaves)
+    n_frozen = int(freeze_frac * n)
+    flags = [0.0 if i < n_frozen else 1.0 for i in range(n)]
+    return jax.tree_util.tree_unflatten(treedef, [jnp.asarray(f) for f in flags])
+
+
+class ClientTrainer:
+    """Runs E local epochs of SGD for any classifier model."""
+
+    def __init__(self, model, learning_rate: float, batch_size: int):
+        self.model = model
+        self.lr = learning_rate
+        self.batch_size = batch_size
+        self._step = jax.jit(self._make_step(), static_argnames=("use_prox",))
+
+    def _make_step(self):
+        model, lr = self.model, self.lr
+
+        def step(params, anchor, x, y, mask, freeze, prox_mu, *, use_prox: bool):
+            def loss_fn(p):
+                if mask is not None:
+                    p = jax.tree_util.tree_map(lambda a, m: a * m, p, mask)
+                base = model.loss(p, x, y)
+                if use_prox:
+                    sq = sum(
+                        jnp.sum(jnp.square(a - b))
+                        for a, b in zip(
+                            jax.tree_util.tree_leaves(p),
+                            jax.tree_util.tree_leaves(anchor),
+                        )
+                    )
+                    base = base + 0.5 * prox_mu * sq
+                return base
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            if mask is not None:
+                grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)
+            if freeze is not None:
+                grads = jax.tree_util.tree_map(lambda g, f: g * f, grads, freeze)
+            new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+            return new_params, loss
+
+        return step
+
+    def local_update(
+        self,
+        global_params: PyTree,
+        x: np.ndarray,
+        y: np.ndarray,
+        epochs: int,
+        rng: np.random.Generator,
+        *,
+        prox_mu: float = 0.0,
+        mask: Optional[PyTree] = None,
+        freeze_frac: float = 0.0,
+    ) -> Tuple[PyTree, Dict[str, float]]:
+        """Returns (update pytree u_k, stats)."""
+        params = global_params
+        freeze = _freeze_mask(global_params, freeze_frac) if freeze_frac > 0 else None
+        losses = []
+        n_samples = 0
+        for _ in range(max(1, epochs)):
+            for bx, by in epoch_batches(x, y, self.batch_size, rng):
+                params, loss = self._step(
+                    params,
+                    global_params,
+                    jnp.asarray(bx),
+                    jnp.asarray(by),
+                    mask,
+                    freeze,
+                    prox_mu,
+                    use_prox=prox_mu > 0.0,
+                )
+                losses.append(float(loss))
+                n_samples += len(bx)
+        update = tree_sub(params, global_params)
+        if mask is not None:
+            update = jax.tree_util.tree_map(lambda u, m: u * m, update, mask)
+        stats = {
+            "mean_loss": float(np.mean(losses)) if losses else float("nan"),
+            "final_loss": losses[-1] if losses else float("nan"),
+            "samples_processed": float(n_samples),
+            "steps": float(len(losses)),
+        }
+        return update, stats

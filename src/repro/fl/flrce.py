@@ -1,0 +1,56 @@
+"""FLrce as a Strategy: relationship-based selection + early stopping.
+
+Wraps :class:`repro.core.FLrceServer` behind the engine-facing Strategy
+interface.  This is the paper's method (Alg. 4) end-to-end; disable early
+stopping with ``use_early_stopping=False`` to get the paper's `FLrce w/o ES`
+ablation arm.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.server import FLrceServer
+from repro.fl.strategy import Strategy
+
+
+class FLrce(Strategy):
+    name = "flrce"
+
+    def __init__(
+        self,
+        num_clients: int,
+        clients_per_round: int,
+        local_epochs: int,
+        dim: int,
+        es_threshold: float = 5.0,
+        explore_decay: float = 0.98,
+        use_early_stopping: bool = True,
+        seed: int = 0,
+    ):
+        super().__init__(num_clients, clients_per_round, local_epochs, seed)
+        self.server = FLrceServer(
+            num_clients=num_clients,
+            dim=dim,
+            clients_per_round=clients_per_round,
+            es_threshold=es_threshold,
+            explore_decay=explore_decay,
+            seed=seed,
+        )
+        self.use_es = use_early_stopping
+        if not use_early_stopping:
+            self.name = "flrce_no_es"
+
+    def select(self, t: int) -> np.ndarray:
+        return self.server.select()
+
+    @property
+    def last_round_was_exploit(self) -> bool:
+        return self.server.last_round_was_exploit
+
+    def post_round(self, t, w_before, client_ids, update_matrix, stats) -> bool:
+        updates = jnp.asarray(update_matrix, jnp.float32)
+        self.server.ingest(jnp.asarray(w_before, jnp.float32), client_ids, updates)
+        stop = self.server.check_early_stop(updates)
+        self.server.advance_round()
+        return bool(stop) and self.use_es

@@ -1,0 +1,177 @@
+"""The federated round engine (paper Algorithm 4's outer loop, strategy-agnostic).
+
+Runs T rounds of: select → broadcast → local train → upload → aggregate →
+strategy bookkeeping (RM + ES for FLrce) → evaluate, with exact resource
+accounting through a :class:`ResourceLedger`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import flatten_pytree
+from repro.data.synthetic import FederatedDataset
+from repro.fl.aggregation import aggregate, aggregation_weights
+from repro.fl.client import ClientTrainer
+from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
+from repro.fl.strategy import Strategy
+from repro.models.cnn import param_count
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    t: int
+    accuracy: float
+    mean_client_loss: float
+    energy_kj: float
+    bytes_gb: float
+    selected: List[int]
+    exploited: bool
+    stopped: bool
+    wall_s: float
+
+
+@dataclasses.dataclass
+class FLResult:
+    strategy: str
+    records: List[RoundRecord]
+    final_accuracy: float
+    rounds_run: int
+    stopped_early: bool
+    ledger: ResourceLedger
+    final_params: PyTree
+
+    @property
+    def energy_kj(self) -> float:
+        return self.ledger.energy_j / 1e3
+
+    @property
+    def bytes_gb(self) -> float:
+        return self.ledger.total_bytes / 1e9
+
+    @property
+    def computation_efficiency(self) -> float:
+        return computation_efficiency(self.final_accuracy, self.ledger.energy_j)
+
+    @property
+    def communication_efficiency(self) -> float:
+        return communication_efficiency(self.final_accuracy, self.ledger.total_bytes)
+
+    def accuracy_curve(self) -> np.ndarray:
+        return np.asarray([r.accuracy for r in self.records])
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "strategy": self.strategy,
+            "final_accuracy": self.final_accuracy,
+            "rounds": self.rounds_run,
+            "stopped_early": self.stopped_early,
+            "energy_kj": self.energy_kj,
+            "bytes_gb": self.bytes_gb,
+            "comp_eff": self.computation_efficiency,
+            "comm_eff": self.communication_efficiency,
+        }
+
+
+def run_federated(
+    model,
+    dataset: FederatedDataset,
+    strategy: Strategy,
+    *,
+    max_rounds: int = 100,
+    learning_rate: float = 0.05,
+    batch_size: int = 32,
+    device: str = "jetson_nano",
+    eval_every: int = 1,
+    seed: int = 0,
+    init_params: Optional[PyTree] = None,
+    verbose: bool = False,
+) -> FLResult:
+    rng = np.random.default_rng(seed)
+    params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
+    n_params = param_count(params)
+    trainer = ClientTrainer(model, learning_rate, batch_size)
+    ledger = ResourceLedger(device=device)
+    eval_fn = jax.jit(model.accuracy)
+    sizes = dataset.client_sizes()
+    records: List[RoundRecord] = []
+    stopped = False
+
+    for t in range(max_rounds):
+        t0 = time.time()
+        ids = strategy.select(t)
+        w_before, _ = flatten_pytree(params)
+        updates, upload_fracs, stats = [], [], []
+        for cid in ids:
+            cfg = strategy.client_config(t, int(cid), params)
+            x_k, y_k = dataset.client_data(int(cid))
+            update, st = trainer.local_update(
+                params,
+                x_k,
+                y_k,
+                cfg.epochs,
+                rng,
+                prox_mu=cfg.prox_mu,
+                mask=cfg.mask,
+                freeze_frac=cfg.freeze_frac,
+            )
+            processed, proc_frac = strategy.process_update(int(cid), update)
+            updates.append(processed)
+            upload_fracs.append(min(proc_frac, cfg.upload_fraction))
+            stats.append(st)
+            # --- resource accounting ---------------------------------------
+            flops = model.flops_per_sample() * len(x_k) * cfg.epochs * cfg.compute_fraction
+            ledger.charge_training(flops)
+            ledger.charge_download(n_params, cfg.download_fraction)
+            ledger.charge_upload(n_params, upload_fracs[-1])
+
+        weights = aggregation_weights(sizes[ids])
+        params = aggregate(params, updates, weights)
+
+        update_matrix = np.stack(
+            [np.asarray(flatten_pytree(u)[0]) for u in updates]
+        )
+        stop = strategy.post_round(t, np.asarray(w_before), ids, update_matrix, stats)
+        ledger.end_round()
+
+        if (t % eval_every == 0) or stop or (t == max_rounds - 1):
+            acc = float(eval_fn(params, jnp.asarray(dataset.eval_x), jnp.asarray(dataset.eval_y)))
+        else:
+            acc = records[-1].accuracy if records else 0.0
+        rec = RoundRecord(
+            t=t,
+            accuracy=acc,
+            mean_client_loss=float(np.mean([s["mean_loss"] for s in stats])),
+            energy_kj=ledger.energy_j / 1e3,
+            bytes_gb=ledger.total_bytes / 1e9,
+            selected=[int(c) for c in ids],
+            exploited=strategy.last_round_was_exploit,
+            stopped=bool(stop),
+            wall_s=time.time() - t0,
+        )
+        records.append(rec)
+        if verbose:
+            print(
+                f"[{strategy.name}] round {t:3d} acc={acc:.4f} "
+                f"loss={rec.mean_client_loss:.4f} stop={stop}"
+            )
+        if stop:
+            stopped = True
+            break
+
+    return FLResult(
+        strategy=strategy.name,
+        records=records,
+        final_accuracy=records[-1].accuracy,
+        rounds_run=len(records),
+        stopped_early=stopped,
+        ledger=ledger,
+        final_params=params,
+    )

@@ -1,0 +1,67 @@
+"""Strategy interface: what varies between FLrce and the baselines.
+
+A strategy controls (1) client selection, (2) the per-client local-training
+variant, (3) update post-processing (compression), (4) per-round bookkeeping
+and the stop decision, and (5) the communication/computation cost fractions
+used by the resource ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class LocalConfig:
+    epochs: int
+    prox_mu: float = 0.0
+    mask: Optional[PyTree] = None        # dropout sub-model mask
+    freeze_frac: float = 0.0             # timelyfl layer freezing
+    compute_fraction: float = 1.0        # relative FLOPs vs full local training
+    download_fraction: float = 1.0       # fraction of model bytes sent down
+    upload_fraction: float = 1.0         # fraction of update bytes sent up
+
+
+class Strategy:
+    """Base = FedAvg: uniform random selection, full local training."""
+
+    name = "fedavg"
+
+    def __init__(self, num_clients: int, clients_per_round: int, local_epochs: int, seed: int = 0):
+        self.m = num_clients
+        self.p = clients_per_round
+        self.epochs = local_epochs
+        self.rng = np.random.default_rng(seed)
+
+    # -- selection -----------------------------------------------------------
+    def select(self, t: int) -> np.ndarray:
+        return np.sort(self.rng.choice(self.m, size=self.p, replace=False))
+
+    # -- local-training variant ----------------------------------------------
+    def client_config(self, t: int, cid: int, global_params: PyTree) -> LocalConfig:
+        return LocalConfig(epochs=self.epochs)
+
+    # -- update post-processing (compression etc.) ----------------------------
+    def process_update(self, cid: int, update: PyTree) -> Tuple[PyTree, float]:
+        """Returns (possibly compressed update, upload byte fraction)."""
+        return update, 1.0
+
+    # -- per-round bookkeeping + stop ----------------------------------------
+    def post_round(
+        self,
+        t: int,
+        w_before: np.ndarray,        # flattened global model sent this round
+        client_ids: np.ndarray,
+        update_matrix: np.ndarray,   # (P, D) flattened processed updates
+        stats: list,
+    ) -> bool:
+        return False
+
+    # hooks for engine-visible metadata
+    @property
+    def last_round_was_exploit(self) -> bool:
+        return False

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the FLrce compute hot-spots.
+
+gram.py             pairwise Gram matrix (relationship modeling, Eq. 5 / Alg. 3)
+aggregate.py        fused weighted aggregation (Eq. 4)
+topk_mask.py        block-local magnitude sparsification (Fedcom baseline)
+decode_attention.py flash-decoding GQA attention (serving shapes)
+ops.py              jit'd public wrappers (interpret=True on CPU)
+ref.py              pure-jnp oracles
+"""

@@ -1,0 +1,104 @@
+"""Pairwise Gram-matrix Pallas kernel — the FLrce relationship-modeling hot spot.
+
+``G = U @ U.T`` for ``U ∈ R^{P×D}`` where P is the number of participating
+clients per round (small, padded to the MXU sublane multiple) and D is the
+flattened model dimension (huge — up to 1.3e11 for dbrx-132b).  One pass over
+U yields every pairwise dot product and every squared norm (diag), from which
+all of Eq. 5 (cosine similarity) and Algorithm 3 (conflict counting) follow.
+
+TPU adaptation (DESIGN.md §6): instead of a GPU-style per-pair dot-product
+kernel, each grid step loads one (P, BLOCK_D) tile into VMEM and issues a
+single MXU matmul, accumulating the (P, P) Gram tile in fp32.  BLOCK_D is
+128-lane aligned; the grid walks D so arbitrarily large models stream through
+VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _gram_kernel(u_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        u, u, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram(u: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True) -> jax.Array:
+    """Gram matrix ``u @ u.T`` in fp32 via a D-blocked Pallas kernel.
+
+    ``u``: (P, D).  D is zero-padded to a multiple of ``block_d`` (zero columns
+    do not change the Gram matrix).
+    """
+    p, d = u.shape
+    pad = (-d) % block_d
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    d_padded = d + pad
+    grid = (d_padded // block_d,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+    )(u)
+
+
+def _xgram_kernel(u_ref, v_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    out_ref[...] += jax.lax.dot_general(
+        u, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def cross_gram(
+    u: jax.Array, v: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True
+) -> jax.Array:
+    """Cross Gram ``u @ v.T`` for (P, D) x (Q, D) — used by asynchronous RM
+    (dots of fresh updates against the stored update/anchor maps)."""
+    if u.shape[1] != v.shape[1]:
+        raise ValueError(f"dim mismatch {u.shape} vs {v.shape}")
+    p, d = u.shape
+    q = v.shape[0]
+    pad = (-d) % block_d
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+        v = jnp.pad(v, ((0, 0), (0, pad)))
+    grid = ((d + pad) // block_d,)
+    return pl.pallas_call(
+        _xgram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_d), lambda i: (0, i)),
+            pl.BlockSpec((q, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((p, q), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+    )(u, v)

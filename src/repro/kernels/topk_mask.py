@@ -1,0 +1,62 @@
+"""Block-local magnitude top-k sparsification kernel (Fedcom baseline hot spot).
+
+Fedcom-style compressors keep the k largest-magnitude entries of an update.
+Exact global top-k needs a full sort of D elements; practical systems
+(including the sparsification baselines the paper cites, e.g. [13], [17]) use
+*block-local* selection: within each BLOCK_D tile keep the local top
+``ceil(keep_frac * BLOCK_D)`` entries.  That is exactly expressible as a
+streaming Pallas kernel: per grid step, load a tile, find the k-th magnitude
+with ``jax.lax.top_k``, and zero everything below it.
+
+The jnp oracle in ``ref.py`` implements the identical block-local semantics,
+so kernel and oracle agree bit-exactly (modulo dtype casts).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 2048
+
+
+def _topk_mask_kernel(u_ref, out_ref, *, k: int):
+    u = u_ref[...]                               # (1, BD)
+    mag = jnp.abs(u.astype(jnp.float32))
+    kth = jax.lax.top_k(mag[0], k)[0][k - 1]     # k-th largest magnitude
+    keep = mag >= kth
+    out_ref[...] = jnp.where(keep, u, jnp.zeros_like(u))
+
+
+@functools.partial(jax.jit, static_argnames=("keep_frac", "block_d", "interpret"))
+def topk_mask(
+    u: jax.Array,
+    *,
+    keep_frac: float = 0.1,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = True,
+) -> jax.Array:
+    """Keep the block-local top ``ceil(keep_frac*block_d)`` magnitudes of (D,)."""
+    if not 0.0 < keep_frac <= 1.0:
+        raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
+    (d,) = u.shape
+    pad = (-d) % block_d
+    if pad:
+        u = jnp.pad(u, (0, pad))
+    dp = d + pad
+    k = max(1, int(-(-keep_frac * block_d // 1)))  # ceil
+    import functools as _ft
+
+    out = pl.pallas_call(
+        _ft.partial(_topk_mask_kernel, k=k),
+        grid=(dp // block_d,),
+        in_specs=[pl.BlockSpec((1, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), u.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+    )(u.reshape(1, dp))
+    return out[0, :d]

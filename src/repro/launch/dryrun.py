@@ -1,0 +1,365 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+# Multi-pod dry-run (deliverable e): lower + compile every step function on
+# the production meshes with 512 placeholder host devices, prove the sharding
+# config is coherent, and dump memory/cost/collective analyses for §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all              # 40 combos
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch ... --multi-pod
+#   PYTHONPATH=src python -m repro.launch.dryrun --flrce-step       # paper-technique step
+#
+# Results land in results/dryrun/<arch>_<shape>_<mesh>.json.
+# NOTE: the XLA_FLAGS assignment above must stay the very first statements —
+# jax locks the host device count on first init.  No `from __future__` here
+# for that reason.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, list_archs
+from repro.configs.shapes import SHAPES, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    build_flrce_round_step,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+from repro.models.transformer import TransformerLM
+from repro.optim import adamw
+from repro.roofline.analysis import Roofline, analytic_hbm_bytes, model_flops_for, parse_collectives
+from repro.roofline.hlo_stats import analyze as hlo_analyze
+from repro.sharding.policy import opt_state_specs, param_specs
+from repro.sharding.specs import (
+    arch_for_shape,
+    decode_input_specs,
+    needs_swa_variant,
+    train_batch_specs,
+)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+# whisper's decoder is positionally capped; a 500k decode is meaningless even
+# as a variant (DESIGN.md §7) — documented skip.
+SKIPS = {("whisper-medium", "long_500k"): "enc-dec decoder positionally capped (448); 500k decode meaningless"}
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _analyses(lowered, compiled) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed")
+            )
+        }
+    except Exception as e:  # pragma: no cover
+        out["cost_analysis_error"] = repr(e)
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            out["memory_analysis"] = {
+                attr: int(getattr(ma, attr))
+                for attr in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(ma, attr)
+            }
+    except Exception as e:  # pragma: no cover
+        out["memory_analysis_error"] = repr(e)
+    return out
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    save: bool = True,
+    verbose: bool = True,
+    mesh: Optional[Mesh] = None,
+    overrides: Optional[Dict[str, Any]] = None,
+    tag: str = "",
+) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) combination.
+
+    ``overrides`` (hillclimb knobs): moe_group_size:int, fsdp:bool,
+    seq_parallel:bool, loss_chunk:int, remat:bool."""
+    overrides = overrides or {}
+    shape = get_shape(shape_name)
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = int(np.prod(mesh.devices.shape))
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+    }
+    if (arch, shape_name) in SKIPS:
+        result["skipped"] = SKIPS[(arch, shape_name)]
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {result['skipped']}")
+        return result
+
+    cfg = arch_for_shape(get_arch(arch), shape)
+    result["variant"] = cfg.name
+    from repro.sharding.policy import batch_dim_axes
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    seq_parallel = overrides.get("seq_parallel", True)
+    model_kwargs = {}
+    if "moe_group_size" in overrides:
+        model_kwargs["moe_group_size"] = overrides["moe_group_size"]
+    if "moe_capacity_factor" in overrides:
+        model_kwargs["moe_capacity_factor"] = float(overrides["moe_capacity_factor"])
+    if "mlstm_chunk" in overrides:
+        model_kwargs["mlstm_chunk"] = int(overrides["mlstm_chunk"])
+    if overrides.get("mlstm_inner_axis"):
+        model_kwargs["mlstm_inner_axis"] = "model"
+    expert_parallel = bool(overrides.get("expert_parallel", False))
+    if expert_parallel and cfg.moe is not None and cfg.moe.num_experts % model_size == 0:
+        model_kwargs["moe_expert_axis"] = "model"
+    model = TransformerLM(
+        cfg,
+        batch_axes=batch_dim_axes(mesh, shape.global_batch),
+        seq_axis="model" if (seq_parallel and shape.kind in ("train", "prefill")) else None,
+        seq_axis_size=model_size,
+        loss_chunk=overrides.get("loss_chunk", 256),
+        remat=overrides.get("remat", True),
+        **model_kwargs,
+    )
+    result["overrides"] = {k: v for k, v in overrides.items()}
+    t0 = time.time()
+
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shapes, mesh, fsdp=overrides.get("fsdp", True),
+                         expert_parallel=expert_parallel)
+    cache_bytes_global = None
+
+    with mesh:
+        if shape.kind == "train":
+            optimizer = adamw(3e-4, weight_decay=0.1)
+            opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+            ospecs = opt_state_specs(pspecs, opt_shapes)
+            batch_sds, batch_specs = train_batch_specs(cfg, shape, mesh)
+            step = build_train_step(model, optimizer)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), _named(mesh, batch_specs)),
+                out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shapes, opt_shapes, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds, batch_specs = train_batch_specs(cfg, shape, mesh)
+            step = build_prefill_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_named(mesh, pspecs), _named(mesh, batch_specs)),
+            )
+            lowered = jitted.lower(params_shapes, batch_sds)
+        else:  # decode
+            inputs, specs = decode_input_specs(model, cfg, shape, mesh)
+            cache_bytes_global = float(sum(
+                np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(inputs["cache"])
+            ))
+            step = build_serve_step(model)
+            args = (params_shapes, inputs["tokens"], inputs["cache"], inputs["position"])
+            in_shard = (
+                _named(mesh, pspecs),
+                _named(mesh, specs["tokens"]),
+                _named(mesh, specs["cache"]),
+                _named(mesh, specs["position"]),
+            )
+            kwargs = {}
+            if "cross_kv" in inputs:
+                args = args + (inputs["cross_kv"],)
+                in_shard = in_shard + (_named(mesh, specs["cross_kv"]),)
+            jitted = jax.jit(step, in_shardings=in_shard, donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    result.update(_analyses(lowered, compiled))
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, chips)          # flat (loop bodies counted once)
+    loop_aware = hlo_analyze(hlo, chips)          # while-trip-count corrected
+    result["collectives"] = {
+        "per_device_bytes": loop_aware.collective_bytes,
+        "per_device_bytes_flat": coll.per_device_bytes,
+        "by_kind": loop_aware.collective_by_kind,
+        "op_count": coll.op_count,
+        "while_trip_counts": loop_aware.while_trip_counts,
+    }
+    flops_dev_flat = result.get("cost_analysis", {}).get("flops", 0.0)
+    bytes_dev_flat = result.get("cost_analysis", {}).get("bytes accessed", 0.0)
+    # compute term: loop-aware dot flops (matmuls dominate)
+    flops_dev = max(loop_aware.dot_flops, flops_dev_flat)
+    # memory term: analytic traffic model (the CPU backend's bytes-accessed is
+    # fusion-pessimistic and loop-unaware; kept in cost_analysis for reference)
+    bytes_dev = analytic_hbm_bytes(cfg, shape, chips, cache_bytes=cache_bytes_global)
+    result["loop_aware"] = {
+        "dot_flops_per_device": loop_aware.dot_flops,
+        "flat_flops_per_device": flops_dev_flat,
+        "hbm_bytes_per_device_analytic": bytes_dev,
+        "hbm_bytes_per_device_hlo_flat": bytes_dev_flat,
+    }
+    roof = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=flops_dev,
+        hbm_bytes_per_device=bytes_dev,
+        collective_bytes_per_device=loop_aware.collective_bytes,
+        collective_by_kind=loop_aware.collective_by_kind,
+        model_flops=model_flops_for(cfg, shape),
+        peak_hbm_bytes=(
+            result.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+            + result.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+        ) or None,
+    )
+    result["roofline"] = roof.row()
+    result["timing"] = {"lower_s": t_lower, "compile_s": t_compile}
+    if verbose:
+        r = roof.row()
+        print(
+            f"[dryrun] {arch:20s} {shape_name:12s} mesh={mesh_name:8s} "
+            f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+            f"collective={r['collective_s']:.3e}s bottleneck={r['bottleneck']} "
+            f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)"
+        )
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(RESULTS_DIR, f"{arch}_{shape_name}_{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, default=float)
+    return result
+
+
+def run_flrce_step(*, multi_pod: bool = False, dim: int = 7_000_000_000, p: int = 16,
+                   save: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    """Dry-run the paper-technique server step on D-sharded updates."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    chips = int(np.prod(mesh.devices.shape))
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+    # pad dim to shard over every axis
+    per = int(np.prod(mesh.devices.shape))
+    dim = ((dim + per - 1) // per) * per
+    step = build_flrce_round_step()
+    w = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    updates = jax.ShapeDtypeStruct((p, dim), jnp.float32)
+    weights = jax.ShapeDtypeStruct((p,), jnp.float32)
+    with mesh:
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                NamedSharding(mesh, P(axes)),
+                NamedSharding(mesh, P(None, axes)),
+                NamedSharding(mesh, P(None)),
+            ),
+            out_shardings=(NamedSharding(mesh, P(axes)), None, None),
+        )
+        t0 = time.time()
+        lowered = jitted.lower(w, updates, weights)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    result: Dict[str, Any] = {"arch": "flrce-server-step", "shape": f"P{p}_D{dim}",
+                              "mesh": mesh_name, "chips": chips}
+    result.update(_analyses(lowered, compiled))
+    coll = parse_collectives(compiled.as_text(), chips)
+    result["collectives"] = {
+        "per_device_bytes": coll.per_device_bytes,
+        "by_kind": coll.by_kind,
+        "op_count": coll.op_count,
+    }
+    result["timing"] = {"total_s": dt}
+    if verbose:
+        print(f"[dryrun] flrce-server-step mesh={mesh_name} D={dim:.2e} "
+              f"collective={coll.per_device_bytes:.3e}B/dev ({dt:.0f}s)")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(os.path.join(RESULTS_DIR, f"flrce_step_{mesh_name}.json"), "w") as f:
+            json.dump(result, f, indent=1, default=float)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="every arch x shape on this mesh")
+    ap.add_argument("--flrce-step", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the result JSON")
+    ap.add_argument("--set", action="append", default=[], metavar="K=V",
+                    help="hillclimb override, e.g. --set moe_group_size=2048 --set fsdp=0")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("none", "None"):
+            overrides[k] = None
+        elif v.lower() in ("0", "1", "true", "false"):
+            overrides[k] = v.lower() in ("1", "true")
+        elif "." in v:
+            overrides[k] = float(v)
+        else:
+            overrides[k] = int(v)
+
+    if args.flrce_step:
+        run_flrce_step(multi_pod=args.multi_pod, save=not args.no_save)
+        return
+    if args.all:
+        failures = []
+        for arch in list_archs():
+            for shape in SHAPES:
+                try:
+                    run_one(arch, shape, multi_pod=args.multi_pod, save=not args.no_save)
+                except Exception:
+                    failures.append((arch, shape))
+                    traceback.print_exc()
+        if failures:
+            print(f"[dryrun] FAILURES: {failures}")
+            raise SystemExit(1)
+        print("[dryrun] all combinations lowered + compiled OK")
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all / --flrce-step)")
+    run_one(args.arch, args.shape, multi_pod=args.multi_pod, save=not args.no_save,
+            overrides=overrides, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is the
+DCN-connected data-parallel replica axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
+    """Small mesh for in-process tests (requires >= data*model host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,66 @@
+"""Step functions the launcher and the dry-run lower: train / prefill / serve,
+plus the FLrce server round step (the paper's technique on sharded updates).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerLM
+from repro.optim.optimizers import Optimizer, apply_updates
+
+PyTree = Any
+
+
+def build_train_step(model: TransformerLM, optimizer: Optimizer) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(model: TransformerLM) -> Callable:
+    """(params, batch) -> last-position logits (B, V).
+
+    Prefill lowers the full-sequence forward (the dominant cost); cache
+    materialization is the cheap epilogue and is exercised by serve_step.
+    """
+
+    def prefill_step(params, batch):
+        h, _ = model.hidden(params, batch)
+        return model.unembed(params, h[:, -1, :])
+
+    return prefill_step
+
+
+def build_serve_step(model: TransformerLM) -> Callable:
+    """One-token decode: (params, inputs) -> (next_token, logits, cache)."""
+
+    def serve_step(params, tokens, cache, position, cross_kv=None):
+        logits, new_cache = model.decode_step(params, tokens, cache, position, cross_kv=cross_kv)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step
+
+
+def build_flrce_round_step() -> Callable:
+    """The paper-technique step on D-sharded flattened updates (dry-runnable).
+
+    (w (D,), updates (P, D), weights (P,)) ->
+        (new_w, cossim (P,P), conflict degree scalar)
+    """
+    from repro.core.distributed import flrce_round_step
+
+    def step(w, updates, weights):
+        return flrce_round_step(w, updates, jnp.zeros((updates.shape[0],), jnp.float32), weights)
+
+    return step

@@ -1,0 +1,5 @@
+"""Model zoo: paper CNNs + the 10 assigned architectures."""
+from repro.models.cnn import MLPClassifier, PaperCNN, param_count
+from repro.models.transformer import TransformerLM
+
+__all__ = ["MLPClassifier", "PaperCNN", "param_count", "TransformerLM"]

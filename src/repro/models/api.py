@@ -1,0 +1,47 @@
+"""Model protocol used by the FL engine and the serving/launch layers.
+
+Two model kinds exist in the framework:
+
+* **Classifier models** (paper reproduction): small MLP/CNNs with
+  ``init / loss / accuracy / flops_per_sample``.
+* **LM models** (assigned architectures): built in ``models.transformer`` and
+  friends, exposing ``init / forward / loss / decode_step`` plus cache
+  constructors; they implement :class:`LanguageModel`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Protocol, Tuple
+
+import jax
+
+PyTree = Any
+
+
+class ClassifierModel(Protocol):
+    """Protocol for the FL-engine-facing classifier models."""
+
+    name: str
+
+    def init(self, rng: jax.Array) -> PyTree: ...
+
+    def loss(self, params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array: ...
+
+    def accuracy(self, params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array: ...
+
+    def flops_per_sample(self) -> float: ...
+
+
+class LanguageModel(Protocol):
+    """Protocol for the assigned-architecture models."""
+
+    def init(self, rng: jax.Array) -> PyTree: ...
+
+    def forward(self, params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array: ...
+
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array: ...
+
+    def init_cache(self, batch: int, max_len: int) -> PyTree: ...
+
+    def decode_step(
+        self, params: PyTree, tokens: jax.Array, cache: PyTree, position: jax.Array
+    ) -> Tuple[jax.Array, PyTree]: ...

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (diagonal, hence parallelizable with an associative scan):
+
+    r_t = sigmoid(x_t W_a)                      (recurrence gate)
+    i_t = sigmoid(x_t W_x)                      (input gate)
+    a_t = exp(c * softplus(Λ) * (-r_t))         (per-channel decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+embedded in the Griffin recurrent block: up-projection to 1.5x width,
+width-4 causal depthwise conv, RG-LRU, GeLU-gated merge, down-projection.
+Training uses ``jax.lax.associative_scan`` over S — the TPU-friendly O(log S)
+form; decode is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_conv1d, conv1d_decode, dense_init, init_conv1d
+
+CONV_WIDTH = 4
+DECAY_C = 8.0
+
+
+def _inner(cfg: ArchConfig) -> int:
+    return (3 * cfg.d_model) // 2
+
+
+def init_rglru(rng, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    inner = _inner(cfg)
+    ru, rg, ro, rc, ra, rx, rl = jax.random.split(rng, 7)
+    return {
+        "w_up": dense_init(ru, d, inner, dtype),
+        "w_gate": dense_init(rg, d, inner, dtype),
+        "conv": init_conv1d(rc, inner, CONV_WIDTH, dtype),
+        "w_a": dense_init(ra, inner, inner, jnp.float32, scale=0.01),
+        "w_x": dense_init(rx, inner, inner, jnp.float32, scale=0.01),
+        "b_a": jnp.zeros((inner,), jnp.float32),
+        "b_x": jnp.zeros((inner,), jnp.float32),
+        # Λ init so that decay a ≈ 0.9..0.999 when r=1 (griffin init)
+        "lam": jnp.linspace(0.7, 5.0, inner).astype(jnp.float32),
+        "w_down": dense_init(ro, inner, d, dtype),
+    }
+
+
+def _gates(params, u: jax.Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_x"] + params["b_x"])
+    log_a = -DECAY_C * jax.nn.softplus(params["lam"]) * r       # (B,S,inner) <= 0
+    gated = i * uf
+    return log_a, gated
+
+
+def _scan_rglru(log_a: jax.Array, x_in: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1.
+
+    Elements combine as (a2*a1, a2*b1 + b2).
+    """
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * x_in
+    # fold initial state into the first element
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Griffin recurrent block over (B, S, D)."""
+    b, s, d = x.shape
+    u = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    u = apply_conv1d(params["conv"], u)
+    log_a, gated = _gates(params, u)
+    h0 = jnp.zeros((b, log_a.shape[-1]), jnp.float32)
+    h = _scan_rglru(log_a, gated, h0)
+    out = (h * jax.nn.gelu(gate.astype(jnp.float32), approximate=True)).astype(x.dtype)
+    return out @ params["w_down"]
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> Dict:
+    inner = _inner(cfg)
+    return {
+        "h": jnp.zeros((batch, inner), jnp.float32),
+        "conv_tail": jnp.zeros((batch, CONV_WIDTH - 1, inner), dtype),
+    }
+
+
+def rglru_decode_step(params, x_t: jax.Array, cache: Dict, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One-token Griffin block step.  x_t: (B, 1, D)."""
+    u = x_t @ params["w_up"]
+    gate = x_t @ params["w_gate"]
+    u, new_tail = conv1d_decode(params["conv"], u, cache["conv_tail"])
+    log_a, gated = _gates(params, u)                 # (B,1,inner)
+    a = jnp.exp(log_a[:, 0])
+    bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a[:, 0]), 1e-12)) * gated[:, 0]
+    h = a * cache["h"] + bterm
+    out = (h[:, None, :] * jax.nn.gelu(gate.astype(jnp.float32), approximate=True)).astype(x_t.dtype)
+    return out @ params["w_down"], {"h": h, "conv_tail": new_tail}

@@ -1,0 +1,289 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory), in chunkwise-parallel / scan forms suited to the TPU.
+
+mLSTM — exponential-gated matrix-memory cell.  Training uses the chunkwise
+formulation (intra-chunk quadratic attention-like term + inter-chunk
+recurrent state), which maps to MXU matmuls per chunk instead of a length-S
+sequential scan.  Decode carries the (C, n, m) state: per head a (hd, hd)
+matrix memory, an (hd,) normalizer and a scalar stabilizer.
+
+sLSTM — scalar-memory cell with recurrent (per-head block-diagonal) hidden
+connections and exponential gating, implemented with ``lax.scan`` (inherently
+sequential; this is the 1-in-8 layer of the xLSTM[7:1] stack).
+
+Both blocks carry their own up/down projections (config d_ff == 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+MLSTM_EXPANSION = 2
+DEFAULT_CHUNK = 256
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def init_mlstm(rng, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    inner = MLSTM_EXPANSION * d
+    rq, rk, rv, ro, rg, ri, rf = jax.random.split(rng, 7)
+    return {
+        "wq": dense_init(rq, d, inner, dtype),
+        "wk": dense_init(rk, d, inner, dtype),
+        "wv": dense_init(rv, d, inner, dtype),
+        "wi": dense_init(ri, d, cfg.num_heads, jnp.float32, scale=0.01),
+        "wf": dense_init(rf, d, cfg.num_heads, jnp.float32, scale=0.01),
+        "bi": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "bf": jnp.full((cfg.num_heads,), 3.0, jnp.float32),  # forget-open init
+        "wo": dense_init(ro, inner, d, dtype),
+        "wgate": dense_init(rg, d, inner, dtype),
+    }
+
+
+def _mlstm_heads(cfg: ArchConfig):
+    inner = MLSTM_EXPANSION * cfg.d_model
+    h = cfg.num_heads
+    return h, inner // h
+
+
+def apply_mlstm(params, x: jax.Array, cfg: ArchConfig, chunk: int = DEFAULT_CHUNK,
+                inner_axis=None, batch_axes=None) -> jax.Array:
+    """Chunkwise-parallel mLSTM forward over (B, S, D).
+
+    ``inner_axis`` (mesh axis name): shard the *v-side* head dim of the matrix
+    memory over this axis and replicate q/k.  Every chunk einsum then
+    contracts replicated or local dims only — without it GSPMD partial-sums
+    the (C,C) score matrices and the (hd,hd) state across the sharded inner
+    dim (measured 0.8-1.1 TB/device of all-reduce at xlstm-1.3b/train_4k).
+    q/k replication costs one small all-gather per chunk (~33 MB).
+    """
+
+    def pin(a, spec):
+        if inner_axis is None:
+            return a
+        from jax.sharding import PartitionSpec as P_
+
+        return jax.lax.with_sharding_constraint(a, P_(*spec))
+
+    b, s, d = x.shape
+    h, hd = _mlstm_heads(cfg)
+    pad = (-s) % chunk
+    if pad:
+        x_p = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_p = x
+    sp = s + pad
+    nc = sp // chunk
+
+    q = (x_p @ params["wq"]).reshape(b, sp, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (x_p @ params["wk"]).reshape(b, sp, h, hd).astype(jnp.float32)
+    v = (x_p @ params["wv"]).reshape(b, sp, h, hd).astype(jnp.float32)
+    q = pin(q, (batch_axes, None, None, None))   # q,k replicated over inner
+    k = pin(k, (batch_axes, None, None, None))
+    v = pin(v, (batch_axes, None, None, inner_axis))
+    log_i = jax.nn.log_sigmoid(x_p.astype(jnp.float32) @ params["wi"] + params["bi"])  # (B,S,H)
+    log_f = jax.nn.log_sigmoid(x_p.astype(jnp.float32) @ params["wf"] + params["bf"])
+
+    # reshape to chunks: (NC, B, C, H, ...)
+    def to_chunks(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    lic, lfc = to_chunks(log_i), to_chunks(log_f)
+
+    def chunk_body(carry, xs):
+        Cst, nst, mst = carry          # (B,H,hd,hd), (B,H,hd), (B,H)
+        qx, kx, vx, li, lf = xs        # (B,C,H,*)
+        csum_f = jnp.cumsum(lf, axis=1)                   # (B,C,H) inclusive
+        total_f = csum_f[:, -1]                           # (B,H)
+        # decay from chunk start to position t (inclusive of t's forget)
+        # intra-chunk matrix:  D[t, u] = exp(csum_f[t] - csum_f[u] + li[u]) for u <= t
+        a = csum_f.transpose(0, 2, 1)                     # (B,H,C)
+        su = (li - lf).transpose(0, 2, 1) - a + lf.transpose(0, 2, 1)  # log i_u - csum-to-u-1... see below
+        # log decay for state carried into the chunk, to position t: csum_f[t]
+        m_intra = a[:, :, :, None] + su[:, :, None, :]    # (B,H,C_t,C_u) = csum_f[t] + li[u] - csum_f[u]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        m_intra = jnp.where(tri[None, None], m_intra, -jnp.inf)
+        m_state = a + mst[:, :, None]                     # (B,H,C): state stabilizer + decay
+        m_new = jnp.maximum(jnp.max(m_intra, axis=-1), m_state)   # (B,H,C)
+        m_new = jnp.maximum(m_new, -1e30)
+
+        dmat = jnp.exp(m_intra - m_new[..., None])        # (B,H,C,C)
+        qh = qx.transpose(0, 2, 1, 3)                     # (B,H,C,hd)
+        kh = kx.transpose(0, 2, 1, 3)
+        vh = vx.transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhtd,bhud->bhtu", qh, kh) * dmat
+        intra = jnp.einsum("bhtu,bhud->bhtd", scores, vh)
+
+        # state contribution
+        decay_state = jnp.exp(m_state - m_new)            # (B,H,C)
+        inter = jnp.einsum("bhtd,bhde->bhte", qh, Cst) * decay_state[..., None]
+        inter_n = jnp.einsum("bhtd,bhd->bht", qh, nst) * decay_state
+
+        num = intra + inter                               # (B,H,C,hd)
+        den_dot = jnp.einsum("bhtu,bhud->bhtd", dmat, kh)
+        den = jnp.abs(jnp.einsum("bhtd,bhtd->bht", qh, den_dot) + inter_n)
+        den = jnp.maximum(den, jnp.exp(-m_new))           # xLSTM max(|n^T q|, 1) stabilized
+        out = num / den[..., None]                        # (B,H,C,hd)
+
+        # update carried state to end of chunk
+        m_end = jnp.maximum(total_f + mst, jnp.max(su + a[:, :, -1:], axis=-1))
+        gk = jnp.exp(su + a[:, :, -1:] - m_end[..., None])  # (B,H,C) per-u weight to chunk end
+        C_new = Cst * jnp.exp(total_f + mst - m_end)[..., None, None] + jnp.einsum(
+            "bhu,bhud,bhue->bhde", gk, kh, vh
+        )
+        C_new = pin(C_new, (batch_axes, None, None, inner_axis))
+        n_new = nst * jnp.exp(total_f + mst - m_end)[..., None] + jnp.einsum("bhu,bhud->bhd", gk, kh)
+        return (C_new, n_new, m_end), out
+
+    C0 = pin(jnp.zeros((b, h, hd, hd), jnp.float32), (batch_axes, None, None, inner_axis))
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    (_, _, _), outs = jax.lax.scan(chunk_body, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    # outs: (NC, B, H, C, hd) -> (B, S, H*hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, sp, h * hd)[:, :s]
+    gate = jax.nn.silu((x @ params["wgate"]).astype(jnp.float32))
+    return ((out * gate).astype(x.dtype)) @ params["wo"]
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> Dict:
+    h, hd = _mlstm_heads(cfg)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(params, x_t: jax.Array, cache: Dict, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    """One-token mLSTM recurrence.  x_t: (B, 1, D)."""
+    b = x_t.shape[0]
+    h, hd = _mlstm_heads(cfg)
+    xt = x_t[:, 0]
+    q = (xt @ params["wq"]).reshape(b, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = (xt @ params["wk"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (xt @ params["wv"]).reshape(b, h, hd).astype(jnp.float32)
+    li = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ params["wi"] + params["bi"])  # (B,H)
+    lf = jax.nn.log_sigmoid(xt.astype(jnp.float32) @ params["wf"] + params["bf"])
+    m_new = jnp.maximum(lf + cache["m"], li)
+    C = cache["C"] * jnp.exp(lf + cache["m"] - m_new)[..., None, None] + jnp.exp(li - m_new)[
+        ..., None, None
+    ] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = cache["n"] * jnp.exp(lf + cache["m"] - m_new)[..., None] + jnp.exp(li - m_new)[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    out = (num / den[..., None]).reshape(b, 1, h * hd)
+    gate = jax.nn.silu((x_t @ params["wgate"]).astype(jnp.float32))
+    y = (out * gate).astype(x_t.dtype) @ params["wo"]
+    return y, {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def init_slstm(rng, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    rz, ri, rf, ro, rr, rp = jax.random.split(rng, 6)
+
+    def gate(r):
+        return dense_init(r, d, d, dtype)
+
+    def rec(r):
+        # per-head recurrent block-diagonal matrices (H, hd, hd)
+        return (0.1 * jax.random.normal(r, (h, hd, hd), jnp.float32) / math.sqrt(hd)).astype(dtype)
+
+    return {
+        "wz": gate(rz), "wi": gate(ri), "wf": gate(rf), "wo_g": gate(ro),
+        "rz": rec(jax.random.fold_in(rr, 0)),
+        "ri": rec(jax.random.fold_in(rr, 1)),
+        "rf": rec(jax.random.fold_in(rr, 2)),
+        "ro": rec(jax.random.fold_in(rr, 3)),
+        "bz": jnp.zeros((d,), jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+        "bo": jnp.zeros((d,), jnp.float32),
+        "wproj": dense_init(rp, d, d, dtype),
+    }
+
+
+def _slstm_cell(params, carry, zx, ix, fx, ox, h_heads_shape):
+    """One sLSTM step.  carry: (c, n, m, h_prev) each (B, D) [m: (B, D)]."""
+    c_prev, n_prev, m_prev, h_prev = carry
+    hnum, hd = h_heads_shape
+    b = h_prev.shape[0]
+    hh = h_prev.reshape(b, hnum, hd)
+
+    def recur(r):
+        return jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32), r.astype(jnp.float32)).reshape(b, hnum * hd)
+
+    z = jnp.tanh(zx + recur(params["rz"]))
+    log_i = jax.nn.log_sigmoid(ix + recur(params["ri"]))
+    log_f = jax.nn.log_sigmoid(fx + recur(params["rf"]))
+    o = jax.nn.sigmoid(ox + recur(params["ro"]))
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m_prev - m_new)
+    c = f_s * c_prev + i_s * z
+    n = jnp.maximum(f_s * n_prev + i_s, jnp.exp(-m_new))
+    h_new = o * (c / n)
+    return (c, n, m_new, h_new), h_new
+
+
+def apply_slstm(params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Sequential sLSTM over (B, S, D) via lax.scan."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    xf = x.astype(jnp.float32)
+    zx = xf @ params["wz"].astype(jnp.float32) + params["bz"]
+    ix = xf @ params["wi"].astype(jnp.float32) + params["bi"]
+    fx = xf @ params["wf"].astype(jnp.float32) + params["bf"]
+    ox = xf @ params["wo_g"].astype(jnp.float32) + params["bo"]
+
+    def body(carry, xs):
+        return _slstm_cell(params, carry, *xs, (h, hd))
+
+    init = (
+        jnp.zeros((b, d), jnp.float32),
+        jnp.ones((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+        jnp.zeros((b, d), jnp.float32),
+    )
+    xs = tuple(a.transpose(1, 0, 2) for a in (zx, ix, fx, ox))
+    _, hs = jax.lax.scan(body, init, xs)
+    out = hs.transpose(1, 0, 2).astype(x.dtype)
+    return out @ params["wproj"]
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def slstm_decode_step(params, x_t: jax.Array, cache: Dict, cfg: ArchConfig) -> Tuple[jax.Array, Dict]:
+    b, _, d = x_t.shape
+    h, hd = cfg.num_heads, d // cfg.num_heads
+    xf = x_t[:, 0].astype(jnp.float32)
+    zx = xf @ params["wz"].astype(jnp.float32) + params["bz"]
+    ix = xf @ params["wi"].astype(jnp.float32) + params["bi"]
+    fx = xf @ params["wf"].astype(jnp.float32) + params["bf"]
+    ox = xf @ params["wo_g"].astype(jnp.float32) + params["bo"]
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    (c, n, m, h_new), out = _slstm_cell(params, carry, zx, ix, fx, ox, (h, hd))
+    y = out[:, None, :].astype(x_t.dtype) @ params["wproj"]
+    return y, {"c": c, "n": n, "m": m, "h": h_new}

@@ -1,0 +1,20 @@
+"""Optimizers in pure JAX (no optax dependency)."""
+from repro.optim.optimizers import (
+    OptState,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = [
+    "OptState",
+    "adamw",
+    "apply_updates",
+    "clip_by_global_norm",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,121 @@
+"""SGD(+momentum) and AdamW as (init, update) pairs over pytrees.
+
+The interface mirrors optax so call-sites stay idiomatic:
+
+    opt = sgd(lr=0.1, momentum=0.9)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Any]
+
+
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    inner: PyTree
+
+
+jax.tree_util.register_pytree_node(
+    OptState,
+    lambda s: ((s.step, s.inner), None),
+    lambda _, c: OptState(step=c[0], inner=c[1]),
+)
+
+
+def _zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0) -> Optimizer:
+    """Plain SGD; with momentum buffers when ``momentum > 0``."""
+
+    def init(params):
+        inner = _zeros_like(params) if momentum > 0.0 else None
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state: OptState, params=None):
+        del params
+        step = state.step + 1
+        rate = lr(step) if callable(lr) else lr
+        if momentum > 0.0:
+            buf = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.inner, grads
+            )
+            updates = jax.tree_util.tree_map(lambda m: -rate * m, buf)
+            return updates, OptState(step=step, inner=buf)
+        updates = jax.tree_util.tree_map(lambda g: -rate * g.astype(jnp.float32), grads)
+        return updates, OptState(step=step, inner=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """AdamW with fp32 moments (the production-config optimizer)."""
+
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"m": _zeros_like(params), "v": _zeros_like(params)},
+        )
+
+    def update(grads, state: OptState, params=None):
+        step = state.step + 1
+        rate = lr(step) if callable(lr) else lr
+        stepf = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state.inner["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.inner["v"],
+            grads,
+        )
+
+        def _upd(m_, v_, p):
+            u = -(rate * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay and p is not None:
+                u = u - rate * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is not None:
+            updates = jax.tree_util.tree_map(_upd, m, v, params)
+        else:
+            updates = jax.tree_util.tree_map(lambda m_, v_: _upd(m_, v_, None), m, v)
+        return updates, OptState(step=step, inner={"m": m, "v": v})
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)

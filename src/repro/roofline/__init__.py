@@ -1,0 +1,10 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (
+    CollectiveStats,
+    Roofline,
+    model_flops_for,
+    parse_collectives,
+)
+from repro.roofline import hw
+
+__all__ = ["CollectiveStats", "Roofline", "model_flops_for", "parse_collectives", "hw"]

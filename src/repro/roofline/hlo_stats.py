@@ -1,0 +1,245 @@
+"""While-loop-aware HLO accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, but the
+layer-scan body executes NC times (and the loss/attention chunk scans their
+own trip counts).  This module parses the post-partitioning HLO text,
+recovers every while loop's trip count from its condition computation
+(``compare(iter, constant)``), and accumulates
+
+* matmul FLOPs (``dot`` ops: 2 x prod(result dims) x contraction size), and
+* per-device collective traffic (ring model, as in ``analysis.py``),
+
+with each computation's counts multiplied by the product of the trip counts
+of the loops that call it.  Custom-call/convolution flops are not modelled
+(none are emitted by this framework's models).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_CALLED = re.compile(r"(?:to_apply|calls|called_computations)=\{?%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    opname: str
+    rest: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = dataclasses.field(default_factory=list)
+
+
+def _parse_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        if line.rstrip().endswith("{") and "->" in line:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                current = _Computation(m.group(1))
+                comps[current.name] = current
+                continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            name, rtype, opname, rest = m.groups()
+            current.ops.append(_Op(name, rtype, opname, rest))
+    return comps
+
+
+def _trip_count(cond: _Computation) -> Optional[int]:
+    """Extract the loop bound from `compare(iter, const)` in the condition."""
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opname == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.result_type + " constant(" + op.rest)
+            if m:
+                consts[op.name] = int(m.group(1))
+    for op in cond.ops:
+        if op.opname == "compare":
+            args = [a.strip().lstrip("%") for a in op.rest.split("),")[0].split(",")]
+            for a in args:
+                a = a.split(")")[0].strip()
+                if a in consts:
+                    return max(1, consts[a])
+    # compare is often folded into a wrapped fusion; the loop bound is then the
+    # (only) s32 constant living in the condition computation
+    if consts:
+        return max(1, max(consts.values()))
+    return None
+
+
+def _dot_flops(op: _Op, types: Dict[str, str]) -> float:
+    """2 * prod(result) * contraction for a dot; needs operand shapes."""
+    result_dims: List[int] = []
+    for _, dims in _shape_dims(op.result_type):
+        result_dims = dims
+        break
+    operands = [a.strip().lstrip("%").split(")")[0] for a in op.rest.split("),")[0].split(",")]
+    lhs = operands[0] if operands else None
+    lhs_type = types.get(lhs, "")
+    lhs_dims: List[int] = []
+    for _, dims in _shape_dims(lhs_type):
+        lhs_dims = dims
+        break
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contraction = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contraction *= lhs_dims[i]
+    n = 1
+    for d in result_dims:
+        n *= d
+    return 2.0 * n * contraction
+
+
+def _collective_traffic(op: _Op, num_devices: int) -> Tuple[str, float]:
+    kind = next((k for k in _COLLECTIVES if op.opname.startswith(k)), None)
+    if kind is None:
+        return "", 0.0
+    nbytes = _shape_bytes(op.result_type)
+    line = op.rest
+    g = num_devices
+    m = _GROUPS_RE.search(line)
+    if m:
+        g = len(m.group(1).split(","))
+    else:
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            g = int(m.group(2))
+    g = max(2, g)
+    if kind == "all-reduce":
+        return kind, 2.0 * nbytes * (g - 1) / g
+    if kind == "all-gather":
+        return kind, nbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return kind, float(nbytes) * (g - 1)
+    if kind == "all-to-all":
+        return kind, nbytes * (g - 1) / g
+    return kind, float(nbytes)
+
+
+@dataclasses.dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trip_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def analyze(hlo: str, num_devices: int) -> HloStats:
+    """Loop-aware per-device dot-FLOPs + collective traffic."""
+    comps = _parse_computations(hlo)
+    types: Dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            types[op.name] = op.result_type
+
+    # map body computation -> trip count
+    body_trips: Dict[str, int] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opname == "while":
+                mc = _COND_RE.search(op.rest)
+                mb = _BODY_RE.search(op.rest)
+                if not (mc and mb):
+                    continue
+                cond_name, body_name = mc.group(1), mb.group(1)
+                tc = _trip_count(comps.get(cond_name, _Computation(""))) or 1
+                body_trips[body_name] = tc
+
+    # multiplier per computation = product of trip counts on the call path.
+    # build call graph (computation -> called computations)
+    calls: Dict[str, List[Tuple[str, int]]] = {c: [] for c in comps}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opname == "while":
+                mc = _COND_RE.search(op.rest)
+                mb = _BODY_RE.search(op.rest)
+                if mc and mb:
+                    cond_name, body_name = mc.group(1), mb.group(1)
+                    calls[comp.name].append((body_name, body_trips.get(body_name, 1)))
+                    calls[comp.name].append((cond_name, body_trips.get(body_name, 1)))
+            else:
+                for callee in _CALLED.findall(op.rest):
+                    if callee in comps:
+                        calls[comp.name].append((callee, 1))
+
+    # find entry (computation not called by anyone)
+    called = {callee for lst in calls.values() for callee, _ in lst}
+    entries = [c for c in comps if c not in called]
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    stack = [(e, 1.0) for e in entries]
+    seen_guard = 0
+    while stack:
+        name, m = stack.pop()
+        seen_guard += 1
+        if seen_guard > 100_000:
+            break
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, k in calls.get(name, []):
+            stack.append((callee, m * k))
+
+    stats = HloStats(while_trip_counts=body_trips)
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        for op in comp.ops:
+            if op.opname == "dot":
+                stats.dot_flops += m * _dot_flops(op, types)
+            else:
+                kind, traffic = _collective_traffic(op, num_devices)
+                if kind:
+                    stats.collective_bytes += m * traffic
+                    stats.collective_by_kind[kind] = (
+                        stats.collective_by_kind.get(kind, 0.0) + m * traffic
+                    )
+    return stats

@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline model (task-specified)."""
+
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_LINK_BW = 50e9             # bytes/s per link
+DCN_BW = 25e9                  # bytes/s per host for pod axis (assumed)
+VMEM_BYTES = 128 * 1024 * 1024  # ~128 MiB VMEM per chip
+HBM_BYTES = 16 * 1024**3       # 16 GiB HBM per chip

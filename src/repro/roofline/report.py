@@ -1,0 +1,97 @@
+"""Render the EXPERIMENTS.md roofline table from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load_rows(mesh: str | None = None) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if d.get("overrides"):
+            continue  # tagged hillclimb runs are reported in §Perf, not here
+        expected = f"{d.get('arch')}_{d.get('shape')}_{d.get('mesh')}.json"
+        if os.path.basename(path) != expected:
+            continue  # tag-suffixed run
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.get(d["shape"], 9), d["mesh"]))
+    return rows
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute s | memory s | collective s | bottleneck "
+        "| useful-FLOPs frac | HBM GiB/dev | MFU@roof |",
+        "|---|---|---|---|---|---|---|---|---|---|"[:-4] + "|",
+    ]
+    for d in rows:
+        if "skipped" in d:
+            out.append(
+                f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — | "
+                f"SKIP ({d['skipped'][:40]}…) | — | — | — |"
+            )
+            continue
+        r = d.get("roofline", {})
+        if not r:
+            continue
+        out.append(
+            f"| {d['arch']}{'*' if d.get('variant','').endswith('+swa') else ''} "
+            f"| {d['shape']} | {d['mesh']} | {_fmt_s(r['compute_s'])} "
+            f"| {_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} "
+            f"| **{r['bottleneck']}** | {r['useful_flops_fraction']:.2f} "
+            f"| {r.get('peak_hbm_gib_per_device') or 0:.1f} "
+            f"| {r['mfu_at_roofline']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def summary_stats(rows: List[Dict]) -> Dict:
+    counts: Dict[str, int] = {}
+    worst = None
+    most_coll = None
+    for d in rows:
+        r = d.get("roofline")
+        if not r:
+            continue
+        counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+        mfu = r["mfu_at_roofline"]
+        if r["useful_flops_fraction"] and (worst is None or mfu < worst[0]):
+            worst = (mfu, d["arch"], d["shape"], d["mesh"])
+        frac = r["collective_s"] / max(1e-30, max(r["compute_s"], r["memory_s"], r["collective_s"]))
+        if r["bottleneck"] == "collective" and (most_coll is None or frac > most_coll[0]):
+            ratio = r["collective_s"] / max(1e-30, max(r["compute_s"], r["memory_s"]))
+            if most_coll is None or ratio > most_coll[0]:
+                most_coll = (ratio, d["arch"], d["shape"], d["mesh"])
+    return {"bottleneck_counts": counts, "worst_mfu": worst, "most_collective_bound": most_coll}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.mesh)
+    print(markdown_table(rows))
+    print()
+    print(json.dumps(summary_stats(rows), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

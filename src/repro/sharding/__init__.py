@@ -1,0 +1,34 @@
+"""Sharding policy + input specs for the production meshes."""
+from repro.sharding.policy import (
+    batch_dim_axes,
+    cache_specs,
+    dp_axes,
+    opt_state_specs,
+    param_spec,
+    param_specs,
+    param_shardings,
+    token_spec,
+)
+from repro.sharding.specs import (
+    arch_for_shape,
+    decode_input_specs,
+    needs_swa_variant,
+    swa_variant,
+    train_batch_specs,
+)
+
+__all__ = [
+    "batch_dim_axes",
+    "cache_specs",
+    "dp_axes",
+    "opt_state_specs",
+    "param_spec",
+    "param_specs",
+    "param_shardings",
+    "token_spec",
+    "arch_for_shape",
+    "decode_input_specs",
+    "needs_swa_variant",
+    "swa_variant",
+    "train_batch_specs",
+]

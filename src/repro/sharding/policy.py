@@ -1,0 +1,228 @@
+"""Divisibility-aware sharding policy (DESIGN.md §8).
+
+Parameters get tensor-parallel specs over the ``model`` axis plus FSDP-style
+sharding of the complementary dimension over ``data``; a dimension is sharded
+only when its size divides the axis size, otherwise it is replicated (the
+fallbacks are what make qwen's 20 heads or whisper's 51865-vocab lower
+cleanly).  Multi-pod meshes keep parameters replicated across ``pod`` (pure
+data parallelism over DCN) — batch dims shard over ``('pod', 'data')``.
+
+Specs are inferred from (key-path, shape); stacked scan leaves (leading NC or
+E dims) get a leading ``None``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# rule table: regex on the final path key -> (spec template per trailing rank)
+# templates name logical roles; resolution maps roles to mesh axes with
+# divisibility checks.  roles: "tp" = model axis, "fsdp" = data axis, None.
+_PARAM_RULES = [
+    # embeddings
+    (r"embed$", {2: ("tp", "fsdp")}),          # (V, D)
+    (r"unembed$", {2: ("fsdp", "tp")}),        # (D, V)
+    # attention / mlstm / generic projections: in-major
+    (r"^w[qkv]$", {2: ("fsdp", "tp")}),        # (D, H*hd)
+    (r"^wo$", {2: ("tp", "fsdp"), 3: (None, "tp", "fsdp")}),  # (H*hd, D) / (E, F, D)
+    (r"^wi$|^wg$|^wgate$|^wz$|^wf$|^wo_g$", {2: ("fsdp", "tp"), 3: (None, "fsdp", "tp")}),
+    (r"^router$", {2: (None, None)}),
+    # rglru
+    (r"^w_up$|^w_gate$", {2: ("fsdp", "tp")}),
+    (r"^w_down$", {2: ("tp", "fsdp")}),
+    (r"^w_a$|^w_x$", {2: ("tp", "fsdp")}),
+    (r"^lam$|^b_a$|^b_x$", {1: ("tp",)}),
+    # slstm recurrent blocks (H, hd, hd) — small, replicate
+    (r"^r[zifo]$|^ro$", {3: (None, None, None)}),
+    (r"^wproj$", {2: ("fsdp", "tp")}),
+    # conv
+    (r"^w$", {2: (None, "tp")}),               # conv1d (width, inner)
+    # norms / biases / scalars
+    (r"scale$|bias$|^b[qkvzif]?$|^bo$|^bf$|^bi$|^bz$", {1: (None,)}),
+]
+
+# moe expert weights: (E, D, F) / (E, F, D) — matched by rank-3 wi/wg/wo above.
+# With expert_parallel=True (and E % model == 0) the templates switch to true
+# expert parallelism: E over `model`, inner dims FSDP'd — the down-projection
+# contraction becomes expert-local and only the token-sized combine output is
+# all-reduced (Megatron-style), instead of the fat (G,E,C,D) buffer.
+_EP_RULES = [
+    (r"^wi$|^wg$", {3: ("ep", "fsdp", None)}),   # (E, D, F)
+    (r"^wo$", {3: ("ep", None, "fsdp")}),        # (E, F, D)
+]
+
+
+def _resolve(role: Optional[str], dim: int, axis_sizes: Dict[str, int],
+             fsdp: bool = True) -> Optional[str]:
+    if role is None:
+        return None
+    if role == "fsdp" and not fsdp:
+        return None
+    axis = {"tp": "model", "fsdp": "data", "ep": "model"}[role]
+    if axis not in axis_sizes:
+        return None
+    return axis if dim % axis_sizes[axis] == 0 else None
+
+
+def param_spec(path: str, shape: Tuple[int, ...], axis_sizes: Dict[str, int],
+               fsdp: bool = True, expert_parallel: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``fsdp=False`` disables the data-axis sharding of weights (pure tensor
+    parallelism): per-layer all-gathers disappear at the cost of replicating
+    each model-shard's parameters across the data axis — the right trade for
+    archs whose optimizer state fits per model shard (<=~10B params)."""
+    rank = len(shape)
+    key = path.split("/")[-1].strip("'\"[]")
+    if expert_parallel and rank >= 3:
+        model = axis_sizes.get("model", 1)
+        for pattern, templates in _EP_RULES:
+            if re.search(pattern, key):
+                trank, template = 3, templates[3]
+                # only valid when E divides the model axis
+                if shape[rank - 3] % model == 0:
+                    lead = (None,) * (rank - trank)
+                    tail = tuple(
+                        _resolve(role, shape[rank - trank + i], axis_sizes, fsdp)
+                        for i, role in enumerate(template)
+                    )
+                    return P(*(lead + tail))
+    for pattern, templates in _PARAM_RULES:
+        if re.search(pattern, key):
+            # allow a stacked leading NC dim: match template on trailing rank
+            for trank, template in sorted(templates.items(), reverse=True):
+                if rank >= trank:
+                    lead = (None,) * (rank - trank)
+                    tail = tuple(
+                        _resolve(role, shape[rank - trank + i], axis_sizes, fsdp)
+                        for i, role in enumerate(template)
+                    )
+                    return P(*(lead + tail))
+    return P(*([None] * rank))
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(param_shapes: PyTree, mesh: Mesh, *, fsdp: bool = True,
+                expert_parallel: bool = False) -> PyTree:
+    """Tree of PartitionSpecs matching a tree of ShapeDtypeStructs/arrays."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_for(path, leaf):
+        return param_spec(_leaf_path_str(path), tuple(leaf.shape), axis_sizes, fsdp,
+                          expert_parallel)
+
+    return jax.tree_util.tree_map_with_path(spec_for, param_shapes)
+
+
+def param_shardings(param_shapes: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(param_shapes, mesh)
+    )
+
+
+# ---------------------------------------------------------------------------
+# activation / batch / cache specs
+# ---------------------------------------------------------------------------
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes a batch dimension shards over (pod+data when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_dim_axes(mesh: Mesh, batch: int):
+    """Largest prefix of (pod, data) whose product divides the batch size."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        if batch % (prod * axis_sizes[a]) == 0:
+            axes.append(a)
+            prod *= axis_sizes[a]
+    return tuple(axes) if axes else None
+
+
+def token_spec(mesh: Mesh, batch: int) -> P:
+    return P(batch_dim_axes(mesh, batch), None)
+
+
+def cache_specs(cache_shapes: PyTree, mesh: Mesh, batch: int, seq_len: int) -> PyTree:
+    """KV/state cache specs for the decode shapes.
+
+    Layout conventions (see models/*): attention kv (..., B, S, K, hd);
+    mlstm (..., B, H, hd, hd) / (..., B, H, hd) / (..., B, H); slstm & rglru
+    (..., B, D_inner) plus rglru conv tail (..., B, W-1, inner).
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axis_sizes.get("model", 1)
+    b_axes = batch_dim_axes(mesh, batch)
+
+    def spec_for(path, leaf):
+        shape = tuple(leaf.shape)
+        key = _leaf_path_str(path).split("/")[-1]
+        rank = len(shape)
+        # find the batch dim: first dim equal to `batch` (after NC stack dims)
+        try:
+            b_idx = shape.index(batch)
+        except ValueError:
+            b_idx = None
+        spec = [None] * rank
+        if b_idx is not None and b_axes is not None:
+            spec[b_idx] = b_axes
+        if key in ("k", "v") and rank >= 4:
+            s_idx, k_idx = rank - 3, rank - 2
+            if shape[k_idx] % model == 0:
+                spec[k_idx] = "model"
+            elif shape[s_idx] % model == 0:
+                spec[s_idx] = "model"
+            # long-context single-batch: spread S over data too
+            if b_axes is None and spec[s_idx] == "model" and "data" in axis_sizes:
+                if shape[s_idx] % (model * axis_sizes["data"]) == 0:
+                    spec[s_idx] = ("data", "model")
+        elif key in ("C", "n", "h", "conv_tail", "c", "m") or rank >= 2:
+            last = rank - 1
+            if shape[last] % model == 0 and shape[last] >= model:
+                spec[last] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def opt_state_specs(param_specs_tree: PyTree, opt_state_shapes: PyTree) -> PyTree:
+    """Optimizer moments mirror their parameter's spec; scalars replicate."""
+    # OptState = {step, inner:{m: tree, v: tree}} or inner=None
+    import jax.numpy as jnp
+
+    def mirror(opt_leaf_path, opt_leaf):
+        return None  # unused; we build structurally below
+
+    from repro.optim.optimizers import OptState
+
+    def build(opt_state):
+        if isinstance(opt_state, OptState):
+            inner = opt_state.inner
+            if inner is None:
+                inner_spec = None
+            elif isinstance(inner, dict) and "m" in inner:
+                inner_spec = {"m": param_specs_tree, "v": param_specs_tree}
+            else:
+                inner_spec = param_specs_tree
+            return OptState(step=P(), inner=inner_spec)
+        raise TypeError(type(opt_state))
+
+    return build(opt_state_shapes)

@@ -1,0 +1,114 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape).
+
+``input_specs`` returns the exact pytree the lowered step function consumes —
+weak-type-correct, shardable, and never allocated.  The modality carve-outs
+live here: whisper gets precomputed ``frames`` (B, 1500, D) and phi-3-vision
+gets ``image_emb`` (B, 576, D) stand-ins from the stubbed frontends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ATTN_LOCAL, ArchConfig, ShapeConfig
+from repro.sharding.policy import batch_dim_axes, cache_specs, token_spec
+
+PyTree = Any
+
+# sliding-window used when a pure full-attention arch runs long_500k as the
+# documented "swa-variant" (DESIGN.md §7)
+SWA_VARIANT_WINDOW = 8192
+LONG_CONTEXT = 524_288
+
+
+def needs_swa_variant(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    """True when (arch, shape) requires the sliding-window serve variant."""
+    if shape.name != "long_500k":
+        return False
+    kinds = set(cfg.layer_kinds())
+    subquadratic = kinds - {"attn_global"}
+    # archs whose every layer is already windowed/recurrent need no variant;
+    # gemma3's 1-in-6 global layers also get windowed at 500k (variant).
+    return "attn_global" in kinds
+
+
+def swa_variant(cfg: ArchConfig, window: int = SWA_VARIANT_WINDOW) -> ArchConfig:
+    """Replace global attention with sliding-window attention (decode variant)."""
+    pattern = tuple(ATTN_LOCAL if k == "attn_global" else k for k in cfg.pattern)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "+swa",
+        pattern=pattern,
+        window=window if cfg.window == 0 else min(cfg.window, window),
+        max_position=LONG_CONTEXT,
+    )
+
+
+def arch_for_shape(cfg: ArchConfig, shape: ShapeConfig) -> ArchConfig:
+    if needs_swa_variant(cfg, shape):
+        return swa_variant(cfg)
+    if shape.name == "long_500k":
+        return dataclasses.replace(cfg, max_position=LONG_CONTEXT)
+    return cfg
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(
+    cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """(ShapeDtypeStructs, PartitionSpecs) for a train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    tspec = token_spec(mesh, b)
+    dtype = jnp.dtype(cfg.dtype)
+    batch = {
+        "tokens": _sds((b, s - cfg.image_tokens), jnp.int32),
+        "labels": _sds((b, s - cfg.image_tokens), jnp.int32),
+    }
+    specs = {"tokens": tspec, "labels": tspec}
+    if cfg.image_tokens:
+        batch["image_emb"] = _sds((b, cfg.image_tokens, cfg.d_model), dtype)
+        specs["image_emb"] = P(tspec[0], None, None)
+    if cfg.is_encdec:
+        batch["frames"] = _sds((b, cfg.encoder_frames, cfg.d_model), dtype)
+        specs["frames"] = P(tspec[0], None, None)
+    return batch, specs
+
+
+def decode_input_specs(
+    model, cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(ShapeDtypeStructs, PartitionSpecs) for one serve_step call.
+
+    The KV cache stand-in has ``shape.seq_len`` slots (ring-limited for
+    windowed layers by init_cache itself).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tspec = token_spec(mesh, b)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(b, s))
+    cspec = cache_specs(cache_shapes, mesh, b, s)
+    inputs = {
+        "tokens": _sds((b, 1), jnp.int32),
+        "cache": cache_shapes,
+        "position": _sds((), jnp.int32),
+    }
+    specs = {
+        "tokens": P(tspec[0], None),
+        "cache": cspec,
+        "position": P(),
+    }
+    if cfg.is_encdec:
+        nc = cfg.num_layers // len(cfg.pattern)
+        h, hd = cfg.num_heads, cfg.resolved_head_dim
+        dtype = jnp.dtype(cfg.dtype)
+        kv_sds = _sds((nc, b, cfg.encoder_frames, h, hd), dtype)
+        inputs["cross_kv"] = (kv_sds, kv_sds)
+        ckv_spec = P(None, tspec[0], None, "model" if h % mesh.shape.get("model", 1) == 0 else None, None)
+        specs["cross_kv"] = (ckv_spec, ckv_spec)
+    return inputs, specs

@@ -1,0 +1,98 @@
+"""Unit tests for selection (Alg. 2) and early stopping (Alg. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    conflict_degree,
+    explore_probability,
+    heuristic_from_omega,
+    select_clients,
+    should_stop,
+    top_p_by_heuristic,
+)
+
+
+def test_explore_probability_decay():
+    assert explore_probability(0) == 1.0
+    assert explore_probability(1) == pytest.approx(0.98)
+    assert explore_probability(50) == pytest.approx(0.98 ** 50)
+
+
+def test_top_p_stable_tiebreak():
+    h = jnp.array([1.0, 3.0, 3.0, 0.5])
+    ids = np.asarray(top_p_by_heuristic(h, 2))
+    assert set(ids) == {1, 2}  # ties broken by id
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 20), st.integers(1, 10), st.integers(0, 200))
+def test_select_returns_p_distinct(m, p, t):
+    if p > m:
+        p = m
+    rng = jax.random.PRNGKey(t)
+    h = jnp.asarray(np.random.default_rng(m).normal(size=m), jnp.float32)
+    ids, exploited = select_clients(rng, h, t, p)
+    ids = np.asarray(ids)
+    assert len(ids) == p
+    assert len(set(ids.tolist())) == p
+    assert ids.min() >= 0 and ids.max() < m
+
+
+def test_late_rounds_exploit_top_p():
+    """At t=1000, phi ~ 0 so selection must be the top-P by heuristic."""
+    m, p = 10, 3
+    h = jnp.asarray(np.arange(m, dtype=np.float32))
+    ids, exploited = select_clients(jax.random.PRNGKey(0), h, 1000, p)
+    assert exploited
+    assert set(np.asarray(ids).tolist()) == {7, 8, 9}
+
+
+def test_heuristic_excludes_diagonal():
+    omega = jnp.asarray([[5.0, 1.0], [2.0, 7.0]])
+    h = heuristic_from_omega(omega)
+    assert float(h[0]) == pytest.approx(1.0)
+    assert float(h[1]) == pytest.approx(2.0)
+
+
+def test_conflict_degree_counts_ordered_pairs():
+    # u0 vs u1 conflict (both directions), u2 orthogonal
+    u = jnp.asarray([[1.0, 0.0], [-1.0, 0.0], [0.0, 1.0]])
+    assert float(conflict_degree(u)) == pytest.approx(2.0 / 3.0)
+
+
+def test_conflict_degree_all_aligned_is_zero():
+    u = jnp.asarray([[1.0, 0.1], [0.9, 0.2], [1.1, 0.0]])
+    assert float(conflict_degree(u)) == pytest.approx(0.0)
+
+
+def test_should_stop_only_on_exploit_rounds():
+    u = jnp.asarray([[1.0, 0.0], [-1.0, 0.0]])
+    d_explore = should_stop(u, psi=0.5, is_exploit_round=False)
+    assert not d_explore.stop
+    d_exploit = should_stop(u, psi=0.5, is_exploit_round=True)
+    assert d_exploit.stop
+    assert d_exploit.conflicts == pytest.approx(1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.floats(0.0, 4.0))
+def test_es_monotone_in_psi(p, psi):
+    """If ES fires at threshold psi it must also fire at any psi' < psi."""
+    rng = np.random.default_rng(p)
+    u = jnp.asarray(rng.normal(size=(p, 5)), jnp.float32)
+    d_hi = should_stop(u, psi=psi, is_exploit_round=True)
+    d_lo = should_stop(u, psi=psi * 0.5, is_exploit_round=True)
+    if d_hi.stop:
+        assert d_lo.stop
+
+
+def test_paper_figure9_example():
+    """Fig. 9: two selected clients with conflicting updates, psi=1 -> stop."""
+    u2 = jnp.asarray([1.0, 0.2])
+    u3 = jnp.asarray([-1.0, 0.1])
+    d = should_stop(jnp.stack([u2, u3]), psi=1.0, is_exploit_round=True)
+    assert d.conflicts == pytest.approx(1.0)  # each client has 1 conflicting peer
+    assert d.stop

@@ -1,0 +1,172 @@
+"""Data pipeline, optimizer and checkpoint tests (incl. hypothesis properties)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    restore_pytree,
+    restore_server_state,
+    save_pytree,
+    save_server_state,
+)
+from repro.core.server import FLrceServer
+from repro.data.partition import (
+    dirichlet_label_partition,
+    dirichlet_quantity_partition,
+    partition_stats,
+)
+from repro.data.synthetic import make_federated_classification
+from repro.data.tokens import SiloTokenStream
+from repro.optim import adamw, apply_updates, clip_by_global_norm, sgd
+from repro.optim.schedules import cosine_decay, linear_warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.floats(0.05, 5.0), st.integers(0, 5))
+def test_label_partition_covers_everything(clients, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 5, size=500)
+    parts = dirichlet_label_partition(labels, clients, alpha=alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500  # disjoint cover
+
+
+def test_low_alpha_is_more_skewed_than_high_alpha():
+    labels = np.random.default_rng(0).integers(0, 10, size=5000)
+    lo = dirichlet_label_partition(labels, 20, alpha=0.05, seed=1)
+    hi = dirichlet_label_partition(labels, 20, alpha=50.0, seed=1)
+    s_lo = partition_stats(lo, labels)
+    s_hi = partition_stats(hi, labels)
+    assert s_lo["mean_label_entropy"] < s_hi["mean_label_entropy"]
+
+
+def test_quantity_partition():
+    parts = dirichlet_quantity_partition(1000, 10, alpha=0.1, seed=0, min_size=3)
+    sizes = [len(p) for p in parts]
+    assert sum(sizes) == 1000
+    assert min(sizes) >= 3
+
+
+def test_federated_dataset_shapes():
+    ds = make_federated_classification(num_clients=5, num_samples=300, num_eval=50,
+                                       feature_dim=6, num_classes=3, seed=0)
+    x, y = ds.client_data(0)
+    assert x.shape[1] == 6
+    assert len(ds.client_indices) == 5
+    assert ds.eval_x.shape == (50, 6)
+
+
+def test_token_stream_skew_and_determinism():
+    ts = SiloTokenStream(vocab_size=100, num_silos=4, seed=0)
+    b1 = ts.batch(0, 4, 16, step=3)
+    b2 = ts.batch(0, 4, 16, step=3)
+    np.testing.assert_array_equal(b1, b2)          # deterministic
+    assert b1.shape == (4, 17)
+    assert b1.max() < 100 and b1.min() >= 0
+    b3 = ts.batch(1, 4, 16, step=3)
+    assert not np.array_equal(b1, b3)              # silos differ
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def test_sgd_step_math():
+    opt = sgd(0.5)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.2, -0.4])}
+    state = opt.init(p)
+    upd, state = opt.update(g, state, p)
+    out = apply_updates(p, upd)
+    np.testing.assert_allclose(np.asarray(out["w"]), [0.9, 2.2], rtol=1e-6)
+    assert int(state.step) == 1
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.9)
+    p = {"w": jnp.zeros(1)}
+    g = {"w": jnp.ones(1)}
+    state = opt.init(p)
+    upd1, state = opt.update(g, state, p)
+    upd2, state = opt.update(g, state, p)
+    np.testing.assert_allclose(np.asarray(upd1["w"]), [-1.0])
+    np.testing.assert_allclose(np.asarray(upd2["w"]), [-1.9])
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(1e-2, weight_decay=0.0)
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.3])}
+    state = opt.init(p)
+    upd, _ = opt.update(g, state, p)
+    # bias-corrected first Adam step ~= -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-1e-2], rtol=1e-3)
+
+
+def test_adamw_weight_decay():
+    opt = adamw(1e-1, weight_decay=0.5)
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.0])}
+    upd, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(np.asarray(upd["w"]), [-1e-1 * 0.5 * 2.0], rtol=1e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}  # norm 5
+    clipped = clip_by_global_norm(g, 1.0)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2)) for x in jax.tree_util.tree_leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+    unclipped = clip_by_global_norm(g, 10.0)
+    np.testing.assert_allclose(np.asarray(unclipped["a"]), [3.0])
+
+
+def test_schedules():
+    cos = cosine_decay(1.0, 100)
+    assert float(cos(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-6)
+    warm = linear_warmup_cosine(2.0, 10, 100)
+    assert float(warm(jnp.asarray(5))) == pytest.approx(1.0)
+    assert float(warm(jnp.asarray(10))) == pytest.approx(2.0, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_pytree_roundtrip(tmp_path):
+    tree = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)}],
+            "scale": jnp.asarray(2.5)}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree)
+    out = restore_pytree(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pytree_restore_shape_mismatch_raises(tmp_path):
+    tree = {"w": jnp.zeros((2, 2))}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_pytree(path, tree)
+    with pytest.raises(ValueError):
+        restore_pytree(path, {"w": jnp.zeros((3, 3))})
+
+
+def test_server_state_roundtrip(tmp_path):
+    srv = FLrceServer(num_clients=6, dim=5, clients_per_round=2, es_threshold=1.0)
+    ids = srv.select()
+    ups = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5)), jnp.float32)
+    srv.ingest(jnp.zeros(5), ids, ups)
+    srv.check_early_stop(ups)
+    srv.advance_round()
+    path = os.path.join(tmp_path, "server.npz")
+    save_server_state(path, srv.state)
+    restored = restore_server_state(path)
+    assert restored.t == srv.state.t
+    np.testing.assert_allclose(np.asarray(restored.omega), np.asarray(srv.state.omega))
+    np.testing.assert_allclose(np.asarray(restored.heuristic), np.asarray(srv.state.heuristic))
+    np.testing.assert_array_equal(np.asarray(restored.last_round), np.asarray(srv.state.last_round))

@@ -1,0 +1,110 @@
+"""Distributed FLrce math: sharded Gram/aggregate vs the local oracles, and
+Eq. 6 from inner products vs the O(D) reference — run in a subprocess with 8
+forced host devices (jax locks the device count at first init)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import (
+    async_relationship_from_dots,
+    conflict_degree_from_gram,
+    cossim_from_gram,
+    flatten_pytree,
+)
+from repro.core.early_stopping import conflict_degree
+from repro.core.relationship import async_relationship
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_cossim_from_gram_matches_direct():
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(5, 32)), jnp.float32)
+    gram = u @ u.T
+    cos = np.asarray(cossim_from_gram(gram))
+    un = np.asarray(u) / np.linalg.norm(np.asarray(u), axis=1, keepdims=True)
+    np.testing.assert_allclose(cos, un @ un.T, rtol=1e-5, atol=1e-6)
+
+
+def test_conflict_from_gram_matches_flat():
+    rng = np.random.default_rng(1)
+    u = jnp.asarray(rng.normal(size=(6, 16)), jnp.float32)
+    got = float(conflict_degree_from_gram(u @ u.T))
+    want = float(conflict_degree(u))
+    assert got == pytest.approx(want, abs=1e-6)
+
+
+def test_async_relationship_from_dots_matches_vector_form():
+    rng = np.random.default_rng(2)
+    d = 24
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    u_p = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    a_q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    u_q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    r = w - a_q
+    got = float(async_relationship_from_dots(
+        uu=jnp.vdot(u_p, u_q), qq=jnp.vdot(u_q, u_q), rq=jnp.vdot(r, u_q),
+        rr=jnp.vdot(r, r), ru=jnp.vdot(r, u_p), pp=jnp.vdot(u_p, u_p),
+    ))
+    want = float(async_relationship(w, u_p, a_q, u_q))
+    assert got == pytest.approx(want, abs=1e-5)
+
+
+def test_flatten_pytree_roundtrip():
+    import jax
+
+    tree = {"a": jnp.arange(4.0).reshape(2, 2), "b": [jnp.zeros(3), jnp.ones(1)]}
+    vec, unflatten = flatten_pytree(tree)
+    assert vec.shape == (8,)
+    back = unflatten(vec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import sharded_gram, sharded_cross_gram, sharded_aggregate
+from repro.kernels import ref
+from repro.launch.mesh import make_debug_mesh
+
+mesh = make_debug_mesh(2, 4)
+axes = ("data", "model")
+rng = np.random.default_rng(0)
+P_, D = 6, 1024
+u = jnp.asarray(rng.normal(size=(P_, D)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(4, D)), jnp.float32)
+w = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+weights = jnp.asarray(rng.dirichlet(np.ones(P_)), jnp.float32)
+
+u_sh = jax.device_put(u, NamedSharding(mesh, P(None, axes)))
+v_sh = jax.device_put(v, NamedSharding(mesh, P(None, axes)))
+w_sh = jax.device_put(w, NamedSharding(mesh, P(axes)))
+
+g = sharded_gram(u_sh, mesh, axes)
+np.testing.assert_allclose(np.asarray(g), np.asarray(ref.gram_ref(u)), rtol=2e-4, atol=1e-3)
+cg = sharded_cross_gram(u_sh, v_sh, mesh, axes)
+np.testing.assert_allclose(np.asarray(cg), np.asarray(ref.cross_gram_ref(u, v)), rtol=2e-4, atol=1e-3)
+agg = sharded_aggregate(w_sh, u_sh, weights, mesh, axes)
+np.testing.assert_allclose(np.asarray(agg), np.asarray(ref.weighted_aggregate_ref(w, u, weights)), rtol=2e-4, atol=1e-3)
+print(json.dumps({"ok": True}))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_reductions_match_local_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

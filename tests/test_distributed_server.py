@@ -1,0 +1,70 @@
+"""DistributedFLrceServer must agree with the host FLrceServer, on an
+8-forced-host-device mesh (subprocess — jax locks the device count)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.server import FLrceServer
+from repro.core.distributed_server import DistributedFLrceServer
+from repro.launch.mesh import make_debug_mesh
+
+mesh = make_debug_mesh(2, 4)
+axes = ("data", "model")
+M, D, Pn = 6, 512, 3
+rng = np.random.default_rng(0)
+
+host = FLrceServer(M, D, Pn, es_threshold=1.5, explore_decay=0.5, seed=0)
+dist = DistributedFLrceServer(M, D, Pn, es_threshold=1.5, mesh=mesh, axes=axes,
+                              explore_decay=0.5, seed=0)
+
+w = jnp.zeros((D,), jnp.float32)
+w_dist = jax.device_put(w, NamedSharding(mesh, P(axes)))
+shard = NamedSharding(mesh, P(None, axes))
+
+for t in range(4):
+    ids = host.select()
+    # advance the distributed server's selection state, but drive both servers
+    # with the same ids: exploit-round tie-breaks on nearly-equal heuristics
+    # may differ in fp; the equivalence under test is the round math
+    dist.select()
+    ups = jnp.asarray(rng.normal(size=(Pn, D)), jnp.float32)
+    weights = jnp.full((Pn,), 1.0 / Pn, jnp.float32)
+    # host path
+    host.ingest(w, ids, ups)
+    host_stop = host.check_early_stop(ups)
+    host.advance_round()
+    w_host_new = np.asarray(w) + np.asarray(weights) @ np.asarray(ups)
+    # distributed path
+    ups_sh = jax.device_put(ups, shard)
+    w_dist, dist_stop = dist.round(w_dist, ids, ups_sh, weights)
+    np.testing.assert_allclose(np.asarray(w_dist), w_host_new, rtol=2e-4, atol=1e-4)
+    assert bool(host_stop) == bool(dist_stop), f"round {t}: stop mismatch"
+    w = jnp.asarray(w_host_new)
+
+# relationship maps agree
+np.testing.assert_allclose(np.asarray(host.state.omega), dist.omega, rtol=2e-3, atol=2e-3)
+np.testing.assert_allclose(np.asarray(host.state.heuristic), dist.heuristic, rtol=2e-3, atol=5e-3)
+print(json.dumps({"ok": True, "t": int(dist.t)}))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_server_matches_host():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], env=env, capture_output=True, text=True,
+        timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,135 @@
+"""FL engine tests: aggregation math, ledger accounting, all baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import make_federated_classification
+from repro.fl import run_federated
+from repro.fl.aggregation import aggregate, aggregation_weights
+from repro.fl.baselines import Dropout, FedAvg, Fedcom, Fedprox, PyramidFL, TimelyFL
+from repro.fl.metrics import (
+    BYTES_PER_PARAM,
+    ResourceLedger,
+    communication_efficiency,
+    computation_efficiency,
+)
+from repro.models.cnn import MLPClassifier
+
+
+@pytest.fixture(scope="module")
+def tiny_fed():
+    ds = make_federated_classification(
+        num_clients=8, alpha=0.2, num_samples=800, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    return ds, MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+
+
+def test_aggregation_weights_eq4():
+    w = aggregation_weights([10, 30, 60])
+    np.testing.assert_allclose(w, [0.1, 0.3, 0.6], rtol=1e-6)
+    assert w.sum() == pytest.approx(1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=10))
+def test_aggregation_weights_simplex(counts):
+    w = aggregation_weights(counts)
+    assert w.sum() == pytest.approx(1.0, abs=1e-5)
+    assert (w >= 0).all()
+
+
+def test_aggregate_matches_eq4_leafwise():
+    w = {"a": jnp.zeros((3,)), "b": jnp.ones((2, 2))}
+    u1 = {"a": jnp.ones((3,)), "b": jnp.ones((2, 2))}
+    u2 = {"a": 3 * jnp.ones((3,)), "b": -jnp.ones((2, 2))}
+    out = aggregate(w, [u1, u2], np.asarray([0.25, 0.75]))
+    # a: 0 + 0.25*1 + 0.75*3 = 2.5 ; b: 1 + 0.25*1 + 0.75*(-1) = 0.5
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.5 * np.ones(3), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["b"]), 0.5 * np.ones((2, 2)), rtol=1e-6)
+
+
+def test_aggregate_identity_weights():
+    w = {"a": jnp.asarray([1.0, 2.0])}
+    u = {"a": jnp.asarray([0.5, -0.5])}
+    out = aggregate(w, [u], np.asarray([1.0]))
+    np.testing.assert_allclose(np.asarray(out["a"]), [1.5, 1.5])
+
+
+def test_ledger_accounting():
+    led = ResourceLedger(device="jetson_nano")
+    led.charge_training(1e12)          # 1 TFLOP
+    led.charge_download(1e6)           # 1M params down
+    led.charge_upload(1e6, 0.5)        # half up
+    assert led.energy_j == pytest.approx(1e12 * 4.3e-11)
+    assert led.bytes_down == 1e6 * BYTES_PER_PARAM
+    assert led.bytes_up == 0.5e6 * BYTES_PER_PARAM
+    assert communication_efficiency(0.8, led.total_bytes) > 0
+    assert computation_efficiency(0.8, led.energy_j) > 0
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (FedAvg, {}),
+    (Fedcom, {"keep_frac": 0.2}),
+    (Fedprox, {"mu": 0.01}),
+    (Dropout, {"keep_rate": 0.6}),
+    (PyramidFL, {}),
+    (TimelyFL, {}),
+])
+def test_every_baseline_runs_three_rounds(tiny_fed, cls, kw):
+    ds, model = tiny_fed
+    strat = cls(8, 3, 2, seed=0, **kw)
+    res = run_federated(model, ds, strat, max_rounds=3, learning_rate=0.1,
+                        batch_size=16, seed=0)
+    assert res.rounds_run == 3
+    assert np.isfinite(res.final_accuracy)
+    assert res.ledger.total_bytes > 0
+
+
+def test_fedcom_uses_less_upload_than_fedavg(tiny_fed):
+    ds, model = tiny_fed
+    r_avg = run_federated(model, ds, FedAvg(8, 3, 2, seed=0), max_rounds=3,
+                          learning_rate=0.1, batch_size=16, seed=0)
+    r_com = run_federated(model, ds, Fedcom(8, 3, 2, seed=0, keep_frac=0.1),
+                          max_rounds=3, learning_rate=0.1, batch_size=16, seed=0)
+    assert r_com.ledger.bytes_up < 0.5 * r_avg.ledger.bytes_up
+    assert r_com.ledger.bytes_down == pytest.approx(r_avg.ledger.bytes_down)
+
+
+def test_fedprox_uses_less_energy_than_fedavg(tiny_fed):
+    ds, model = tiny_fed
+    r_avg = run_federated(model, ds, FedAvg(8, 3, 4, seed=0), max_rounds=3,
+                          learning_rate=0.1, batch_size=16, seed=0)
+    r_prox = run_federated(model, ds, Fedprox(8, 3, 4, seed=0, epoch_fraction=0.25),
+                           max_rounds=3, learning_rate=0.1, batch_size=16, seed=0)
+    assert r_prox.ledger.energy_j < 0.5 * r_avg.ledger.energy_j
+
+
+def test_dropout_does_not_reduce_compute_but_reduces_comm(tiny_fed):
+    """Paper §4.5.3: width dropout saves bytes, not FLOPs."""
+    ds, model = tiny_fed
+    r_avg = run_federated(model, ds, FedAvg(8, 3, 2, seed=0), max_rounds=2,
+                          learning_rate=0.1, batch_size=16, seed=0)
+    r_drop = run_federated(model, ds, Dropout(8, 3, 2, seed=0, keep_rate=0.5),
+                           max_rounds=2, learning_rate=0.1, batch_size=16, seed=0)
+    assert r_drop.ledger.energy_j == pytest.approx(r_avg.ledger.energy_j, rel=1e-6)
+    assert r_drop.ledger.total_bytes < r_avg.ledger.total_bytes
+
+
+def test_dropout_masks_updates(tiny_fed):
+    """Masked entries of a dropout update must be exactly zero."""
+    ds, model = tiny_fed
+    strat = Dropout(8, 3, 2, seed=0, keep_rate=0.5)
+    params = model.init(jax.random.PRNGKey(0))
+    cfg = strat.client_config(0, 0, params)
+    from repro.fl.client import ClientTrainer
+    trainer = ClientTrainer(model, 0.1, 16)
+    x, y = ds.client_data(0)
+    upd, _ = trainer.local_update(params, x, y, 1, np.random.default_rng(0),
+                                  mask=cfg.mask)
+    for m_leaf, u_leaf in zip(jax.tree_util.tree_leaves(cfg.mask),
+                              jax.tree_util.tree_leaves(upd)):
+        masked = np.asarray(u_leaf)[np.asarray(m_leaf) == 0]
+        assert np.all(masked == 0.0)

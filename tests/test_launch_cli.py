@@ -1,0 +1,44 @@
+"""Smoke tests for the launcher CLIs (subprocess, tiny configs)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ENV = dict(os.environ, PYTHONPATH=SRC)
+
+
+@pytest.mark.slow
+def test_train_cli_paper_mode():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--mode", "paper",
+         "--strategy", "flrce", "--clients", "8", "--participants", "3",
+         "--rounds", "2", "--epochs", "1", "--samples", "600"],
+        env=ENV, capture_output=True, text=True, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert '"final_accuracy"' in out.stdout
+
+
+@pytest.mark.slow
+def test_train_cli_pretrain_mode():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--mode", "pretrain",
+         "--arch", "recurrentgemma-2b", "--silos", "4", "--participants", "2",
+         "--rounds", "2", "--local-steps", "1", "--batch", "2", "--seq", "32"],
+        env=ENV, capture_output=True, text=True, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "mean_loss" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "xlstm-1.3b",
+         "--batch", "2", "--prompt-len", "4", "--gen", "4"],
+        env=ENV, capture_output=True, text=True, timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "tok/s" in out.stdout

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED variants of each
+assigned architecture family (<=2 layers, d_model<=512, <=4 experts) run one
+forward and one train step on CPU; shapes + finiteness asserted."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models import TransformerLM
+from repro.optim import adamw, apply_updates
+
+ARCHS = list_archs()
+
+
+def _make_batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.image_tokens:
+        batch["image_emb"] = jnp.asarray(
+            rng.normal(size=(b, cfg.image_tokens, cfg.d_model)), jnp.float32
+        )
+    if cfg.is_encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_frames, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = get_arch(arch, reduced=True)
+    assert cfg.num_layers <= 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_arch(arch, reduced=True)
+    model = TransformerLM(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = _make_batch(cfg, b, s)
+    logits, aux = jax.jit(model.forward)(params, batch)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch):
+    cfg = get_arch(arch, reduced=True)
+    model = TransformerLM(cfg, remat=True)
+    params = model.init(jax.random.PRNGKey(1))
+    optimizer = adamw(1e-3)
+    opt_state = optimizer.init(params)
+    batch = _make_batch(cfg, 2, 16, seed=1)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, grads = jax.value_and_grad(model.loss)(p, b)
+        upd, o = optimizer.update(grads, o, p)
+        return apply_updates(p, upd), o, loss
+
+    params2, opt_state, loss = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    leaves = jax.tree_util.tree_leaves(params2)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32)))) for l in leaves)
+    # params actually changed
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree_util.tree_leaves(params), leaves)
+    )
+    assert moved, f"{arch} train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-7b", "mixtral-8x22b", "xlstm-1.3b",
+                                  "recurrentgemma-2b", "gemma3-4b"])
+def test_decode_step_shapes(arch):
+    cfg = get_arch(arch, reduced=True)
+    model = TransformerLM(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    b = 2
+    cache = model.init_cache(b, 32)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, new_cache = jax.jit(model.decode_step)(params, tok, cache, jnp.int32(0))
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(new_cache)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact assigned geometry."""
+    expect = {
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151_936),
+        "gemma3-4b": (34, 2560, 8, 4, 10_240, 262_144),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50_304),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32_064),
+        "dbrx-132b": (40, 6144, 48, 8, 10_752, 100_352),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16_384, 32_768),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256_000),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51_865),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256_000),
+        "deepseek-7b": (30, 4096, 32, 32, 11_008, 102_400),
+    }
+    for arch, (nl, d, h, kv, ff, v) in expect.items():
+        cfg = get_arch(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (nl, d, h, kv, ff, v), f"{arch}: {got}"
+        assert cfg.citation, f"{arch} missing citation"
+
+
+def test_moe_configs():
+    dbrx = get_arch("dbrx-132b")
+    assert dbrx.moe.num_experts == 16 and dbrx.moe.top_k == 4
+    mix = get_arch("mixtral-8x22b")
+    assert mix.moe.num_experts == 8 and mix.moe.top_k == 2
+
+
+def test_param_counts_in_expected_range():
+    """Analytic param counts are near the architectures' nameplate sizes."""
+    for arch, lo, hi in [
+        ("deepseek-7b", 5e9, 9e9),
+        ("dbrx-132b", 1.0e11, 1.6e11),
+        ("mixtral-8x22b", 1.1e11, 1.8e11),
+        ("xlstm-1.3b", 0.9e9, 2.0e9),
+        ("recurrentgemma-2b", 1.8e9, 3.6e9),
+        ("whisper-medium", 2.5e8, 1.2e9),
+    ]:
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+    # MoE active < total
+    dbrx = get_arch("dbrx-132b")
+    assert dbrx.active_param_count() < 0.5 * dbrx.param_count()

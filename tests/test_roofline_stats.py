@@ -1,0 +1,84 @@
+"""Roofline accounting tests: the ring model and the while-aware HLO parser."""
+import pytest
+
+from repro.roofline.analysis import parse_collectives
+from repro.roofline.hlo_stats import analyze
+
+# a minimal post-partitioning-HLO-shaped module: an entry that calls a while
+# loop (trip count 7 via the condition constant) whose body has one dot and
+# one all-reduce, plus one top-level all-gather.
+_SYNTH_HLO = """
+HloModule jit_step
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %it = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %d = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%d), replica_groups=[2,4]<=[8], to_apply=%sum.1
+  ROOT %t = (s32[], f32[8,16]) tuple(%it, %ar)
+}
+
+%cond.1 (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %it2 = s32[] get-tuple-element(%p2), index=0
+  %lim = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%it2, %lim), direction=LT
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (arg: f32[8,16]) -> f32[8,32] {
+  %arg = f32[8,16] parameter(0)
+  %init = (s32[], f32[8,16]) tuple(s32[] constant(0), %arg)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  %res = f32[8,16] get-tuple-element(%w2), index=1
+  ROOT %ag = f32[8,32] all-gather(%res), replica_groups={{0,1},{2,3},{4,5},{6,7}}, dimensions={1}
+}
+"""
+
+
+def test_while_trip_count_and_dot_flops():
+    st = analyze(_SYNTH_HLO, num_devices=8)
+    assert list(st.while_trip_counts.values()) == [7]
+    # dot: 2 * (8*16) * 16 = 4096 flops, executed 7 times
+    assert st.dot_flops == pytest.approx(7 * 2 * 8 * 16 * 16)
+
+
+def test_loop_aware_collective_bytes():
+    st = analyze(_SYNTH_HLO, num_devices=8)
+    # all-reduce in the body: f32[8,16] = 512B, group 4 -> 2*512*3/4 = 768/iter
+    ar = 7 * 2 * 512 * 3 / 4
+    # top-level all-gather: f32[8,32] = 1024B result, group 2 -> 1024*1/2
+    ag = 1024 * 1 / 2
+    assert st.collective_by_kind["all-reduce"] == pytest.approx(ar)
+    assert st.collective_by_kind["all-gather"] == pytest.approx(ag)
+    assert st.collective_bytes == pytest.approx(ar + ag)
+
+
+def test_flat_parser_counts_once():
+    """parse_collectives (flat) sees the loop body once — by design."""
+    st = parse_collectives(_SYNTH_HLO, num_devices=8)
+    assert st.op_count == 2
+    flat_ar = 2 * 512 * 3 / 4
+    assert st.by_kind["all-reduce"] == pytest.approx(flat_ar)
+
+
+def test_ring_model_kinds():
+    hlo = """
+ENTRY %e (x: f32[128]) -> f32[128] {
+  %x = f32[128] parameter(0)
+  %rs = f32[128] reduce-scatter(%x), replica_groups=[1,4]<=[4], dimensions={0}, to_apply=%s
+  %aa = f32[128] all-to-all(%rs), replica_groups=[1,4]<=[4]
+  ROOT %cp = f32[128] collective-permute(%aa), source_target_pairs={{0,1}}
+}
+"""
+    st = parse_collectives(hlo, num_devices=4)
+    assert st.by_kind["reduce-scatter"] == pytest.approx(512 * 3)
+    assert st.by_kind["all-to-all"] == pytest.approx(512 * 3 / 4)
+    assert st.by_kind["collective-permute"] == pytest.approx(512)

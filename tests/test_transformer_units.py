@@ -1,0 +1,231 @@
+"""Unit tests for the model-zoo building blocks against naive oracles."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_conv1d,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    conv1d_decode,
+    init_conv1d,
+    init_mlp,
+    init_norm,
+)
+
+
+def _naive_attention(q, k, v, causal=True, window=0):
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, s, kvh, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bskgt", qf, k.astype(jnp.float32)) / math.sqrt(hd)
+    i = jnp.arange(s)
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i[None, :] <= i[:, None]
+    if window:
+        mask &= i[None, :] > i[:, None] - window
+    logits = jnp.where(mask[None, :, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)
+
+
+@pytest.mark.parametrize("s,window,kv_chunk", [(32, 0, 8), (33, 0, 16), (64, 7, 16)])
+def test_chunked_attention_vs_naive(s, window, kv_chunk):
+    b, h, kvh, hd = 2, 4, 2, 16
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    got = attn.chunked_attention(q, k, v, pos, pos, causal=True, window=window, kv_chunk=kv_chunk)
+    want = _naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_rope_preserves_inner_products_at_equal_offsets():
+    """RoPE property: <rope(q,i), rope(k,j)> depends only on i-j."""
+    hd = 32
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = attn.apply_rope(q, jnp.asarray([[i]]), 10_000.0)
+        kj = attn.apply_rope(k, jnp.asarray([[j]]), 10_000.0)
+        return float(jnp.vdot(qi, kj))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), abs=1e-4)
+    assert dot_at(0, 0) == pytest.approx(float(jnp.vdot(q, k)), abs=1e-4)
+
+
+def test_norms():
+    d = 16
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, d)) * 5, jnp.float32)
+    p = init_norm("rmsnorm", d, jnp.float32)
+    out = apply_norm("rmsnorm", p, x)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    p = init_norm("layernorm", d, jnp.float32)
+    out = np.asarray(apply_norm("layernorm", p, x))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, rtol=1e-2)
+
+
+def test_conv1d_causal_and_decode_equivalence():
+    d, width, s, b = 8, 4, 10, 2
+    rng = jax.random.PRNGKey(0)
+    p = init_conv1d(rng, d, width, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(b, s, d)), jnp.float32)
+    full = apply_conv1d(p, x)
+    # causality: output at t must not depend on inputs after t
+    x2 = x.at[:, 5:, :].set(0.0)
+    full2 = apply_conv1d(p, x2)
+    np.testing.assert_allclose(np.asarray(full[:, :5]), np.asarray(full2[:, :5]), rtol=1e-5)
+    # step-by-step decode matches
+    tail = jnp.zeros((b, width - 1, d), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, tail = conv1d_decode(p, x[:, t : t + 1], tail)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, axis=1)), np.asarray(full), rtol=1e-4, atol=1e-5
+    )
+
+
+def _tiny_cfg(**kw):
+    base = dict(
+        name="tiny", family="dense", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=2, d_ff=64, vocab_size=97, pattern=("attn_global",),
+        norm="rmsnorm", act="silu", gated_mlp=True,
+    )
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_mlstm_chunkwise_equals_recurrent():
+    """The chunkwise-parallel mLSTM must equal its step recurrence."""
+    cfg = _tiny_cfg(num_heads=2, num_kv_heads=2, d_model=16, d_ff=0)
+    p = ssm_mod.init_mlstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 20
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(b, s, 16)) * 0.5, jnp.float32)
+    full = ssm_mod.apply_mlstm(p, x, cfg, chunk=8)   # non-divisible: padding path
+    cache = ssm_mod.init_mlstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = ssm_mod.mlstm_decode_step(p, x[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step), rtol=1e-3, atol=1e-4)
+
+
+def test_slstm_scan_equals_step():
+    cfg = _tiny_cfg(num_heads=2, num_kv_heads=2, d_model=16, d_ff=0)
+    p = ssm_mod.init_slstm(jax.random.PRNGKey(1), cfg, jnp.float32)
+    b, s = 2, 12
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(b, s, 16)) * 0.5, jnp.float32)
+    full = ssm_mod.apply_slstm(p, x, cfg)
+    cache = ssm_mod.init_slstm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = ssm_mod.slstm_decode_step(p, x[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(jnp.concatenate(outs, axis=1)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_rglru_scan_equals_step():
+    cfg = _tiny_cfg(d_model=16, d_ff=0)
+    p = rglru_mod.init_rglru(jax.random.PRNGKey(2), cfg, jnp.float32)
+    b, s = 2, 14
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(b, s, 16)) * 0.5, jnp.float32)
+    full = rglru_mod.apply_rglru(p, x, cfg)
+    cache = rglru_mod.init_rglru_cache(cfg, b, jnp.float32)
+    outs = []
+    for t in range(s):
+        o, cache = rglru_mod.rglru_decode_step(p, x[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(jnp.concatenate(outs, axis=1)), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_rglru_decay_bounded():
+    """RG-LRU state is a contraction: |h| stays bounded for bounded input."""
+    cfg = _tiny_cfg(d_model=16, d_ff=0)
+    p = rglru_mod.init_rglru(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jnp.ones((1, 500, 16), jnp.float32)
+    out = rglru_mod.apply_rglru(p, x, cfg)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.max(jnp.abs(out))) < 1e3
+
+
+def test_moe_dense_oracle():
+    """Drop-free top-k MoE == dense per-token expert mixture."""
+    cfg = _tiny_cfg(
+        family="moe", moe=MoEConfig(num_experts=4, top_k=2, aux_loss_weight=0.0)
+    )
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 6
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(b, s, cfg.d_model)), jnp.float32)
+    got, aux = moe_mod.apply_moe(p, x, cfg, capacity_factor=None)
+
+    # oracle: per token, softmax router, take top-2, renormalize, run experts
+    xt = np.asarray(x).reshape(-1, cfg.d_model)
+    router = np.asarray(p["router"])
+    probs = jax.nn.softmax(jnp.asarray(xt @ router), axis=-1)
+    want = np.zeros_like(xt)
+    for n in range(xt.shape[0]):
+        pr = np.asarray(probs[n])
+        top = np.argsort(-pr)[:2]
+        gates = pr[top] / pr[top].sum()
+        for g, e in zip(gates, top):
+            h = xt[n] @ np.asarray(p["wi"][e])
+            gate_act = jax.nn.silu(jnp.asarray(xt[n] @ np.asarray(p["wg"][e])))
+            h = np.asarray(gate_act) * h
+            want[n] += g * (h @ np.asarray(p["wo"][e]))
+    np.testing.assert_allclose(
+        np.asarray(got).reshape(-1, cfg.d_model), want, rtol=2e-3, atol=2e-4
+    )
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tiny capacity factor some tokens must fall through to residual 0."""
+    cfg = _tiny_cfg(
+        family="moe", moe=MoEConfig(num_experts=2, top_k=1, aux_loss_weight=0.0)
+    )
+    p = moe_mod.init_moe(jax.random.PRNGKey(1), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    full, _ = moe_mod.apply_moe(p, x, cfg, capacity_factor=None)
+    tight, _ = moe_mod.apply_moe(p, x, cfg, capacity_factor=0.25)
+    dropped = np.any(
+        np.all(np.asarray(tight) == 0.0, axis=-1) & ~np.all(np.asarray(full) == 0.0, axis=-1)
+    )
+    assert dropped
+
+
+def test_mlp_variants():
+    d, f = 8, 16
+    p = init_mlp(jax.random.PRNGKey(0), d, f, True, jnp.float32)
+    x = jnp.ones((2, 3, d), jnp.float32)
+    out = apply_mlp(p, x, "silu")
+    want = (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+    p2 = init_mlp(jax.random.PRNGKey(1), d, f, False, jnp.float32)
+    out2 = apply_mlp(p2, x, "relu2")
+    want2 = (jax.nn.relu(x @ p2["wi"]) ** 2) @ p2["wo"]
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want2), rtol=1e-5)
