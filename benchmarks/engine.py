@@ -1,0 +1,100 @@
+"""Round-engine benchmark: sequential reference vs batched vmap/scan engine.
+
+The batched engine's claim (DESIGN.md §Engine) is that one fused device
+program per round beats O(clients × steps) Python dispatches.  This benchmark
+measures wall-clock per round for a 16-client × 50-step cohort (n=800
+samples/client, batch 32, 2 local epochs ⇒ 50 SGD steps each) and reports
+the speedup; the refactor's acceptance bar is ≥2× on CPU.
+
+    PYTHONPATH=src python benchmarks/engine.py            # timed comparison
+    PYTHONPATH=src python benchmarks/engine.py --smoke    # CI: 3-round batched run
+
+The first round of each engine is warmup (jit compilation) and excluded.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.data import make_federated_classification
+from repro.fl import run_federated
+from repro.fl.baselines import FedAvg
+from repro.models.cnn import MLPClassifier
+
+CLIENTS = 16
+BATCH = 32
+EPOCHS = 2
+SAMPLES_PER_CLIENT = 800          # 800/32 * 2 epochs = 50 steps per client
+
+
+def _dataset(num_clients: int, samples_per_client: int):
+    ds = make_federated_classification(
+        num_clients=num_clients,
+        alpha=1e6,                 # ~uniform: every client gets the same n,
+        # so each trains exactly samples_per_client/BATCH * EPOCHS steps
+        num_samples=num_clients * samples_per_client,
+        num_eval=512,
+        feature_dim=32,
+        num_classes=10,
+        seed=0,
+    )
+    return ds
+
+
+def run(engine: str, ds, model, rounds: int):
+    t0 = time.time()
+    res = run_federated(
+        model, ds, FedAvg(CLIENTS, CLIENTS, EPOCHS, seed=0),
+        max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
+        engine=engine,
+    )
+    wall = time.time() - t0
+    # exclude the compile-heavy first round (unless it's the only one)
+    timed = res.records[1:] if len(res.records) > 1 else res.records
+    per_round = float(np.mean([r.wall_s for r in timed]))
+    return res, wall, per_round
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: assert a 3-round batched run completes")
+    ap.add_argument("--rounds", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    model = MLPClassifier(feature_dim=32, num_classes=10, hidden=(64, 64))
+
+    if args.smoke:
+        ds = _dataset(4, 128)
+        res = run_federated(
+            model, ds, FedAvg(4, 4, 1, seed=0),
+            max_rounds=3, learning_rate=0.05, batch_size=BATCH, seed=0,
+            engine="batched",
+        )
+        assert res.rounds_run == 3, res.rounds_run
+        assert np.isfinite(res.final_accuracy), res.final_accuracy
+        assert res.records[-1].evaluated
+        print(f"engine-smoke OK: 3 batched rounds, acc={res.final_accuracy:.3f}")
+        return 0
+
+    ds = _dataset(CLIENTS, SAMPLES_PER_CLIENT)
+    steps = SAMPLES_PER_CLIENT // BATCH * EPOCHS
+    print(f"cohort: {CLIENTS} clients x {steps} steps (batch {BATCH})")
+
+    _, _, seq_round = run("sequential", ds, model, args.rounds)
+    print(f"sequential: {seq_round*1e3:8.1f} ms/round")
+    _, _, bat_round = run("batched", ds, model, args.rounds)
+    print(f"batched:    {bat_round*1e3:8.1f} ms/round")
+    speedup = seq_round / bat_round
+    print(f"speedup:    {speedup:8.2f}x")
+    if speedup < 2.0:
+        print("WARNING: batched engine below the 2x acceptance bar", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

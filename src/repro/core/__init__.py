@@ -5,6 +5,7 @@ from repro.core.relationship import (
     async_relationship,
     cossim,
     orthdist,
+    relationship_block,
     relationship_row,
     sync_relationship,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "async_relationship",
     "cossim",
     "orthdist",
+    "relationship_block",
     "relationship_row",
     "sync_relationship",
     "explore_probability",

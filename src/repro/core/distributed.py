@@ -28,6 +28,22 @@ from repro.kernels import ops as kops
 _EPS = 1e-12
 
 
+def _shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """jax.shard_map with replication checks off, across jax versions.
+
+    jax >= 0.5 exposes ``jax.shard_map(..., check_vma=...)``; 0.4.x has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.  Checks are
+    disabled either way because pallas_call outputs carry no vma metadata.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
 # ---------------------------------------------------------------------------
 # Flatten / unflatten at the FL boundary
 # ---------------------------------------------------------------------------
@@ -102,13 +118,7 @@ def sharded_gram(u: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
         g = kops.gram(u_shard)
         return jax.lax.psum(g, axes)
 
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=P(None, axes),
-        out_specs=P(None, None),
-        check_vma=False,  # pallas_call outputs carry no vma metadata
-    )(u)
+    return _shard_map(local, mesh, P(None, axes), P(None, None))(u)
 
 
 def sharded_cross_gram(u: jax.Array, v: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
@@ -116,13 +126,7 @@ def sharded_cross_gram(u: jax.Array, v: jax.Array, mesh: Mesh, axes: Tuple[str, 
         g = kops.cross_gram(u_shard, v_shard)
         return jax.lax.psum(g, axes)
 
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(None, axes), P(None, axes)),
-        out_specs=P(None, None),
-        check_vma=False,
-    )(u, v)
+    return _shard_map(local, mesh, (P(None, axes), P(None, axes)), P(None, None))(u, v)
 
 
 def sharded_aggregate(
@@ -133,13 +137,7 @@ def sharded_aggregate(
     def local(w_shard, u_shard, p_full):
         return kops.weighted_aggregate(w_shard, u_shard, p_full)
 
-    return jax.shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axes), P(None, axes), P(None)),
-        out_specs=P(axes),
-        check_vma=False,
-    )(w, updates, weights)
+    return _shard_map(local, mesh, (P(axes), P(None, axes), P(None)), P(axes))(w, updates, weights)
 
 
 # ---------------------------------------------------------------------------

@@ -15,13 +15,19 @@ Two estimators of the pairwise client relationship degree Ω[p, q] ∈ [-1, 1]:
   implicit but which is required for ``orthdist`` to be well defined.
 
 All functions are pure and jit-compatible; they operate on flattened update
-vectors.  ``core.distributed`` provides mesh-sharded equivalents built on the
-same math via a Gram matrix.
+vectors.  ``relationship_row`` is the per-client reference (Algorithm 1
+verbatim); ``relationship_block`` is the fused production path that refreshes
+every selected client's Ω row at once from ``gram``/``cross_gram`` reductions
+(the Pallas kernels in ``repro.kernels``), since both the Eq. 5 cossims and
+the Eq. 6 orthdists decompose into dot products.  ``core.distributed``
+provides mesh-sharded equivalents built on the same decomposition.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops as kops
 
 _EPS = 1e-12
 
@@ -118,3 +124,71 @@ def relationship_row(
     # Ω[k, k] stays at its previous value (self-relationship excluded, Eq. 7)
     row = row.at[k].set(omega_row[k])
     return row
+
+
+def relationship_block(
+    ids: jax.Array,           # (K,) int — fresh (distinct) client indices
+    u: jax.Array,             # (K, D) fresh updates, row-aligned with ids
+    w_t: jax.Array,           # (D,) global model at round t
+    updates: jax.Array,       # (M, D) update map V (rows ids already = u)
+    anchors: jax.Array,       # (M, D) anchor map A (rows ids already = w_t)
+    last_rounds: jax.Array,   # (M,) time map R; -1 = never seen
+    t: int,
+    omega_rows: jax.Array,    # (K, M) previous Ω rows for ids
+) -> jax.Array:
+    """Fused Algorithm 1: all K fresh rows of Ω in one shot (K, M).
+
+    Equivalent to stacking ``relationship_row`` over ``ids`` (the maps must
+    already contain the fresh updates/anchors, as Alg. 4 line 10 writes them
+    first), but the O(K·M·D) work is two Gram-style reductions through the
+    Pallas kernels — ``cross_gram(U, V)`` and ``cross_gram(U, A)`` — plus
+    O(M·D) map/model dots that fuse into the surrounding XLA program; both
+    Eq. 5 cossims and Eq. 6 orthdists decompose into these inner products
+    (``core.distributed`` documents the identity
+    ``orthdist² = ‖x−a‖² − ⟨x−a, v⟩²/‖v‖²``).  The fresh self-dots ⟨u_k,u_k⟩
+    (``gram(U)``'s diagonal) come for free from ``cross_gram(U, V)``: row
+    ``ids[k]`` of V *is* ``u_k``.
+    """
+    from repro.core.distributed import async_relationship_from_dots
+
+    u32 = u.astype(jnp.float32)
+    v32 = updates.astype(jnp.float32)
+    a32 = anchors.astype(jnp.float32)
+    w32 = w_t.astype(jnp.float32)
+    k = u.shape[0]
+    arange_k = jnp.arange(k)
+
+    # --- kernel-backed O(K·M·D) reductions --------------------------------
+    uv = kops.cross_gram(u32, v32)                      # (K,M) ⟨u_k, v_j⟩
+    ua = kops.cross_gram(u32, a32)                      # (K,M) ⟨u_k, a_j⟩
+    pp = uv[arange_k, ids]                              # (K,)  ⟨u_k, u_k⟩
+    # --- map/model and row-wise dots (O(M·D), fuse into XLA) ---------------
+    uw = u32 @ w32                                      # (K,)  ⟨u_k, w⟩
+    vw = v32 @ w32                                      # (M,)  ⟨v_j, w⟩
+    aw = a32 @ w32                                      # (M,)  ⟨a_j, w⟩
+    vv = jnp.sum(v32 * v32, axis=1)                     # (M,)  ‖v_j‖²
+    av = jnp.sum(a32 * v32, axis=1)                     # (M,)  ⟨a_j, v_j⟩
+    aa = jnp.sum(a32 * a32, axis=1)                     # (M,)  ‖a_j‖²
+    ww = jnp.vdot(w32, w32)
+
+    # --- synchronous rows (Eq. 5) -----------------------------------------
+    norms_u = jnp.sqrt(jnp.maximum(pp, _EPS))           # (K,)
+    norms_v = jnp.sqrt(jnp.maximum(vv, _EPS))           # (M,)
+    sync = uv / jnp.maximum(norms_u[:, None] * norms_v[None, :], _EPS)
+
+    # --- asynchronous rows (Eq. 6) from dots ------------------------------
+    rq = vw - av                                        # (M,) ⟨w−a_j, v_j⟩
+    rr = ww - 2.0 * aw + aa                             # (M,) ‖w−a_j‖²
+    ru = uw[:, None] - ua                               # (K,M) ⟨w−a_j, u_k⟩
+    asyncr = async_relationship_from_dots(
+        uu=uv, qq=vv[None, :], rq=rq[None, :], rr=rr[None, :],
+        ru=ru, pp=pp[:, None],
+    )
+
+    fresh = last_rounds >= (t - 1)
+    seen = last_rounds >= 0
+    rows = jnp.where(fresh[None, :], sync, asyncr)
+    rows = jnp.where(seen[None, :], rows, omega_rows)
+    # Ω[k, k] keeps its previous value (self-relationship excluded, Eq. 7)
+    rows = rows.at[arange_k, ids].set(omega_rows[arange_k, ids])
+    return rows

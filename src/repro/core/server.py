@@ -91,28 +91,28 @@ class FLrceServer:
         st = self.state
         t = st.t
         ids = np.asarray(client_ids)
-        # write V/A/R *after* relationship modeling uses the previous maps for
-        # asynchronous comparisons, but Alg. 4 writes V/R first (line 10) so a
-        # pair selected in the same round is compared synchronously.  We follow
-        # Alg. 4: write first, then model relationships.
+        # Alg. 4 writes V/A/R first (line 10), then models relationships, so a
+        # pair selected in the same round is compared synchronously.
         updates = st.updates.at[ids].set(client_updates.astype(jnp.float32))
         anchors = st.anchors.at[ids].set(w_t.astype(jnp.float32)[None, :])
         last_round = st.last_round.at[ids].set(t)
 
-        omega = st.omega
-        for pos, k in enumerate(ids):
-            row = relationship.relationship_row(
-                int(k),
-                client_updates[pos],
-                w_t,
-                updates,
-                anchors,
-                last_round,
-                t,
-                omega[int(k)],
-            )
-            omega = omega.at[int(k)].set(row)
-        heuristic = heuristics.update_heuristic_rows(st.heuristic, omega, jnp.asarray(ids))
+        # All P fresh Ω rows in one fused Gram-kernel pass (no per-client
+        # Python loop; each row only depends on its own previous row, so the
+        # block is exactly the stacked per-row recurrence).
+        ids_dev = jnp.asarray(ids)
+        rows = relationship.relationship_block(
+            ids_dev,
+            client_updates,
+            w_t,
+            updates,
+            anchors,
+            last_round,
+            t,
+            st.omega[ids_dev],
+        )
+        omega = st.omega.at[ids_dev].set(rows)
+        heuristic = heuristics.update_heuristic_rows(st.heuristic, omega, ids_dev)
         self.state = dataclasses.replace(
             st,
             omega=omega,

@@ -1,7 +1,16 @@
 """Client-side local training (paper Eq. 3, Alg. 4 'Locally' block).
 
-A :class:`ClientTrainer` jits one SGD step per (model, variant) and reuses it
-across all clients and rounds.  Variants cover the baselines' local tweaks:
+Two execution paths produce the same math (see DESIGN.md §Engine):
+
+* :class:`ClientTrainer` — the sequential reference.  One jitted SGD step per
+  (model, variant), called client-by-client and step-by-step from Python.
+* :class:`BatchedCohortTrainer` — the production path.  The whole selected
+  cohort's local training runs as ONE jitted program: ``lax.scan`` over the
+  (padded) step axis, ``vmap`` over the client axis.  A single device
+  round-trip returns the stacked update pytree, the flat (P, D) update
+  matrix, and the per-client loss traces.
+
+Variants cover the baselines' local tweaks in both paths:
 
 * ``prox_mu``       — Fedprox proximal term  µ/2‖w − w_global‖²
 * ``mask``          — Dropout sub-model training (masked params/grads)
@@ -12,8 +21,9 @@ epochs, matching the paper's u_k (the aggregate of E epochs of SGD).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -124,3 +134,241 @@ class ClientTrainer:
             "steps": float(len(losses)),
         }
         return update, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched (vmapped) cohort training
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CohortPlan:
+    """Padded, device-ready batch schedule for one round's selected cohort.
+
+    Ragged client datasets are padded along two axes: within a batch (zero
+    sample weight) and along the step axis (zero step validity).  Invalid
+    steps and padded samples contribute nothing to losses or gradients, so a
+    padded schedule reproduces the sequential engine's math exactly.
+    """
+
+    x: np.ndarray            # (P, S, B, *feat)
+    y: np.ndarray            # (P, S, B) int32
+    sample_w: np.ndarray     # (P, S, B) float32: 1 = real sample, 0 = pad
+    step_valid: np.ndarray   # (P, S) float32: 1 = real step, 0 = pad
+    epochs: List[int]
+    num_samples: List[int]
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def num_steps(self) -> int:
+        return self.x.shape[1]
+
+
+def _bucket_steps(s: int) -> int:
+    """Round the step axis up to a power of two (floor 8) so the jitted
+    cohort program is retraced per size *bucket*, not per exact cohort."""
+    s = max(s, 1)
+    b = 8
+    while b < s:
+        b <<= 1
+    return b
+
+
+def build_cohort_plan(
+    client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
+    epochs: Sequence[int],
+    batch_size: int,
+    rng: np.random.Generator,
+    *,
+    bucket_steps: bool = True,
+) -> CohortPlan:
+    """Stack every selected client's shuffled epoch batches into one schedule.
+
+    Consumes ``rng`` in exactly the order the sequential engine does
+    (client-major, epoch-minor, one ``permutation`` per epoch), so both
+    engines see identical batch sequences for a given round.
+    """
+    if not client_data:
+        raise ValueError("empty cohort")
+    feat = client_data[0][0].shape[1:]
+    per_client: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    steps_per_client: List[int] = []
+    for (x, y), e in zip(client_data, epochs):
+        n = len(x)
+        nb = -(-n // batch_size) if n else 0
+        s_k = max(1, int(e)) * nb
+        bx = np.zeros((s_k, batch_size, *feat), np.float32)
+        by = np.zeros((s_k, batch_size), np.int32)
+        bw = np.zeros((s_k, batch_size), np.float32)
+        s = 0
+        for _ in range(max(1, int(e))):
+            order = rng.permutation(n)
+            for start in range(0, n, batch_size):
+                ix = order[start : start + batch_size]
+                bx[s, : len(ix)] = x[ix]
+                by[s, : len(ix)] = y[ix]
+                bw[s, : len(ix)] = 1.0
+                s += 1
+        per_client.append((bx, by, bw))
+        steps_per_client.append(s_k)
+
+    s_max = max(max(steps_per_client), 1)
+    s_pad = _bucket_steps(s_max) if bucket_steps else s_max
+    p = len(client_data)
+    px = np.zeros((p, s_pad, batch_size, *feat), np.float32)
+    py = np.zeros((p, s_pad, batch_size), np.int32)
+    pw = np.zeros((p, s_pad, batch_size), np.float32)
+    pv = np.zeros((p, s_pad), np.float32)
+    for k, (bx, by, bw) in enumerate(per_client):
+        s_k = steps_per_client[k]
+        px[k, :s_k], py[k, :s_k], pw[k, :s_k] = bx, by, bw
+        pv[k, :s_k] = 1.0
+    return CohortPlan(
+        x=px, y=py, sample_w=pw, step_valid=pv,
+        epochs=[max(1, int(e)) for e in epochs],
+        num_samples=[len(x) for x, _ in client_data],
+    )
+
+
+def stack_variant_trees(trees: Sequence[Optional[PyTree]], template: PyTree) -> Tuple[Optional[PyTree], bool]:
+    """Stack per-client mask pytrees along a new leading axis.
+
+    ``None`` entries become all-ones (multiplying by 1.0 is exact in fp32, so
+    clients without a mask are untouched).  Returns ``(stacked, any_present)``;
+    when no client has a mask the stacked tree is ``None`` and the program
+    skips masking entirely.
+    """
+    if all(tr is None for tr in trees):
+        return None, False
+    filled = [
+        tr if tr is not None else jax.tree_util.tree_map(jnp.ones_like, template)
+        for tr in trees
+    ]
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *filled), True
+
+
+def stack_freeze_flags(params: PyTree, freeze_fracs: Sequence[float]) -> PyTree:
+    """Per-leaf trainability flags for a cohort: (P,)-stacked scalars."""
+    flags = [_freeze_mask(params, float(f)) for f in freeze_fracs]
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *flags)
+
+
+class BatchedCohortTrainer:
+    """Runs all P selected clients' local epochs as one device program.
+
+    The returned flat update matrix uses the same leaf order as
+    :func:`repro.core.distributed.flatten_pytree`, so the engine can hand it
+    straight to aggregation, relationship modeling, and early stopping
+    without re-flattening.
+    """
+
+    def __init__(self, model, learning_rate: float, batch_size: int):
+        self.model = model
+        self.lr = learning_rate
+        self.batch_size = batch_size
+        self._train = jax.jit(
+            self._make_train(), static_argnames=("use_prox", "has_mask")
+        )
+
+    def _make_train(self):
+        model, lr = self.model, self.lr
+
+        def per_example_losses(p, x, y):
+            # model.loss over a single-sample batch == that sample's loss;
+            # vmap re-batches it, matching the sequential batched compute.
+            return jax.vmap(lambda xi, yi: model.loss(p, xi[None], yi[None]))(x, y)
+
+        def one_client(global_params, xs, ys, ws, valid, mask, freeze, prox_mu, *, use_prox, has_mask):
+            def step(params, inp):
+                x, y, w, v = inp
+
+                def loss_fn(p):
+                    q = jax.tree_util.tree_map(lambda a, m: a * m, p, mask) if has_mask else p
+                    per = per_example_losses(q, x, y)
+                    base = jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
+                    if use_prox:
+                        # on the MASKED params, matching ClientTrainer's loss_fn
+                        sq = sum(
+                            jnp.sum(jnp.square(a - b))
+                            for a, b in zip(
+                                jax.tree_util.tree_leaves(q),
+                                jax.tree_util.tree_leaves(global_params),
+                            )
+                        )
+                        base = base + 0.5 * prox_mu * sq
+                    return base
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                if has_mask:
+                    grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)
+                # freeze flags and the step-validity flag both gate the update
+                grads = jax.tree_util.tree_map(lambda g, f: g * (f * v), grads, freeze)
+                new_params = jax.tree_util.tree_map(lambda a, g: a - lr * g, params, grads)
+                return new_params, loss
+
+            final, losses = jax.lax.scan(step, global_params, (xs, ys, ws, valid))
+            update = tree_sub(final, global_params)
+            if has_mask:
+                update = jax.tree_util.tree_map(lambda u, m: u * m, update, mask)
+            return update, losses
+
+        def train(global_params, xs, ys, ws, valid, mask, freeze, prox_mu, *, use_prox, has_mask):
+            updates, losses = jax.vmap(
+                functools.partial(one_client, use_prox=use_prox, has_mask=has_mask),
+                in_axes=(None, 0, 0, 0, 0, 0 if has_mask else None, 0, 0),
+            )(global_params, xs, ys, ws, valid, mask, freeze, prox_mu)
+            p = xs.shape[0]
+            flat = jnp.concatenate(
+                [jnp.reshape(l, (p, -1)).astype(jnp.float32)
+                 for l in jax.tree_util.tree_leaves(updates)],
+                axis=1,
+            )
+            return updates, flat, losses
+
+        return train
+
+    def train_cohort(
+        self,
+        global_params: PyTree,
+        plan: CohortPlan,
+        *,
+        prox_mus: Sequence[float],
+        masks: Sequence[Optional[PyTree]],
+        freeze_fracs: Sequence[float],
+    ) -> Tuple[PyTree, jax.Array, List[Dict[str, float]]]:
+        """Returns (stacked update pytree with leading P axis,
+        flat (P, D) fp32 update matrix, per-client stats)."""
+        mask, has_mask = stack_variant_trees(masks, global_params)
+        freeze = stack_freeze_flags(global_params, freeze_fracs)
+        mu = jnp.asarray(np.asarray(prox_mus, np.float32))
+        use_prox = bool(np.any(np.asarray(prox_mus) > 0.0))
+        updates, flat, losses = self._train(
+            global_params,
+            jnp.asarray(plan.x),
+            jnp.asarray(plan.y),
+            jnp.asarray(plan.sample_w),
+            jnp.asarray(plan.step_valid),
+            mask if has_mask else {},
+            freeze,
+            mu,
+            use_prox=use_prox,
+            has_mask=has_mask,
+        )
+        stats = cohort_stats(np.asarray(losses), plan)
+        return updates, flat, stats
+
+
+def cohort_stats(losses: np.ndarray, plan: CohortPlan) -> List[Dict[str, float]]:
+    """Per-client stats from the (P, S) loss trace — ONE host transfer/round."""
+    out: List[Dict[str, float]] = []
+    for k in range(plan.num_clients):
+        v = plan.step_valid[k] > 0
+        lk = losses[k][v]
+        out.append({
+            "mean_loss": float(np.mean(lk)) if lk.size else float("nan"),
+            "final_loss": float(lk[-1]) if lk.size else float("nan"),
+            "samples_processed": float(plan.sample_w[k].sum()),
+            "steps": float(v.sum()),
+        })
+    return out

@@ -49,6 +49,8 @@ class FLrce(Strategy):
         return self.server.last_round_was_exploit
 
     def post_round(self, t, w_before, client_ids, update_matrix, stats) -> bool:
+        # w_before/update_matrix arrive as device arrays from the engine's
+        # shared flat round buffer; asarray is a no-op then (no host bounce).
         updates = jnp.asarray(update_matrix, jnp.float32)
         self.server.ingest(jnp.asarray(w_before, jnp.float32), client_ids, updates)
         stop = self.server.check_early_stop(updates)

@@ -3,12 +3,25 @@
 Runs T rounds of: select → broadcast → local train → upload → aggregate →
 strategy bookkeeping (RM + ES for FLrce) → evaluate, with exact resource
 accounting through a :class:`ResourceLedger`.
+
+Two interchangeable execution engines (see DESIGN.md §Engine):
+
+* ``engine="sequential"`` — the reference path: one jitted SGD step per
+  client per batch, driven from Python.  O(P × steps) device dispatches.
+* ``engine="batched"`` — the production path (default): the whole cohort's
+  local training is one jitted vmap/scan program, and the round's flat
+  (P, D) update matrix is produced on device and shared — without bouncing
+  through NumPy — between aggregation (Eq. 4), relationship modeling
+  (Eq. 5/6 via the Gram kernels), and early stopping (Alg. 3).
+
+Both engines consume the host RNG identically and run the same math, so they
+produce matching results within fp32 tolerance (tests/test_batched_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -16,13 +29,15 @@ import numpy as np
 
 from repro.core.distributed import flatten_pytree
 from repro.data.synthetic import FederatedDataset
-from repro.fl.aggregation import aggregate, aggregation_weights
-from repro.fl.client import ClientTrainer
+from repro.fl.aggregation import aggregation_weights
+from repro.fl.client import BatchedCohortTrainer, ClientTrainer, build_cohort_plan
 from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
-from repro.fl.strategy import Strategy
+from repro.fl.strategy import LocalConfig, Strategy
 from repro.models.cnn import param_count
 
 PyTree = Any
+
+ENGINES = ("sequential", "batched")
 
 
 @dataclasses.dataclass
@@ -36,6 +51,8 @@ class RoundRecord:
     exploited: bool
     stopped: bool
     wall_s: float
+    evaluated: bool = True   # False ⇒ ``accuracy`` is copied from the last
+    # freshly evaluated round (eval_every > 1), not a measurement of round t.
 
 
 @dataclasses.dataclass
@@ -80,6 +97,37 @@ class FLResult:
         }
 
 
+def _flatten_update(update: PyTree) -> jax.Array:
+    return flatten_pytree(update)[0]
+
+
+def _sequential_round(
+    trainer: ClientTrainer,
+    params: PyTree,
+    dataset: FederatedDataset,
+    ids: np.ndarray,
+    cfgs: Sequence[LocalConfig],
+    rng: np.random.Generator,
+) -> Tuple[List[PyTree], List[Dict[str, float]]]:
+    """Reference path: per-client Python loop over jitted single steps."""
+    updates, stats = [], []
+    for cid, cfg in zip(ids, cfgs):
+        x_k, y_k = dataset.client_data(int(cid))
+        update, st = trainer.local_update(
+            params,
+            x_k,
+            y_k,
+            cfg.epochs,
+            rng,
+            prox_mu=cfg.prox_mu,
+            mask=cfg.mask,
+            freeze_frac=cfg.freeze_frac,
+        )
+        updates.append(update)
+        stats.append(st)
+    return updates, stats
+
+
 def run_federated(
     model,
     dataset: FederatedDataset,
@@ -93,58 +141,92 @@ def run_federated(
     seed: int = 0,
     init_params: Optional[PyTree] = None,
     verbose: bool = False,
+    engine: str = "batched",
 ) -> FLResult:
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
     rng = np.random.default_rng(seed)
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
-    trainer = ClientTrainer(model, learning_rate, batch_size)
+    trainer: Any
+    if engine == "sequential":
+        trainer = ClientTrainer(model, learning_rate, batch_size)
+    else:
+        trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
     ledger = ResourceLedger(device=device)
     eval_fn = jax.jit(model.accuracy)
+    eval_x, eval_y = jnp.asarray(dataset.eval_x), jnp.asarray(dataset.eval_y)
     sizes = dataset.client_sizes()
     records: List[RoundRecord] = []
     stopped = False
+    last_eval_acc = 0.0
 
     for t in range(max_rounds):
         t0 = time.time()
         ids = strategy.select(t)
-        w_before, _ = flatten_pytree(params)
-        updates, upload_fracs, stats = [], [], []
-        for cid in ids:
-            cfg = strategy.client_config(t, int(cid), params)
-            x_k, y_k = dataset.client_data(int(cid))
-            update, st = trainer.local_update(
-                params,
-                x_k,
-                y_k,
-                cfg.epochs,
+        # The round's flat buffer: w_before is flattened ONCE and shared by
+        # aggregation, relationship modeling, and early stopping.
+        w_before, unflatten = flatten_pytree(params)
+        cfgs = [strategy.client_config(t, int(cid), params) for cid in ids]
+
+        if engine == "sequential":
+            updates, stats = _sequential_round(trainer, params, dataset, ids, cfgs, rng)
+            processed_cols, upload_fracs = [], []
+            for cid, cfg, update in zip(ids, cfgs, updates):
+                processed, proc_frac = strategy.process_update(int(cid), update)
+                processed_cols.append(_flatten_update(processed))
+                upload_fracs.append(min(proc_frac, cfg.upload_fraction))
+            update_matrix = jnp.stack(processed_cols)
+        else:
+            plan = build_cohort_plan(
+                [dataset.client_data(int(cid)) for cid in ids],
+                [cfg.epochs for cfg in cfgs],
+                batch_size,
                 rng,
-                prox_mu=cfg.prox_mu,
-                mask=cfg.mask,
-                freeze_frac=cfg.freeze_frac,
             )
-            processed, proc_frac = strategy.process_update(int(cid), update)
-            updates.append(processed)
-            upload_fracs.append(min(proc_frac, cfg.upload_fraction))
-            stats.append(st)
-            # --- resource accounting ---------------------------------------
-            flops = model.flops_per_sample() * len(x_k) * cfg.epochs * cfg.compute_fraction
+            stacked, update_matrix, stats = trainer.train_cohort(
+                params,
+                plan,
+                prox_mus=[cfg.prox_mu for cfg in cfgs],
+                masks=[cfg.mask for cfg in cfgs],
+                freeze_fracs=[cfg.freeze_frac for cfg in cfgs],
+            )
+            if strategy.processes_updates:
+                # compression strategies transform per-client pytrees on host
+                processed_cols, upload_fracs = [], []
+                for pos, (cid, cfg) in enumerate(zip(ids, cfgs)):
+                    u_k = jax.tree_util.tree_map(lambda l: l[pos], stacked)
+                    processed, proc_frac = strategy.process_update(int(cid), u_k)
+                    processed_cols.append(_flatten_update(processed))
+                    upload_fracs.append(min(proc_frac, cfg.upload_fraction))
+                update_matrix = jnp.stack(processed_cols)
+            else:
+                upload_fracs = [cfg.upload_fraction for cfg in cfgs]
+
+        # --- resource accounting -------------------------------------------
+        for cid, cfg, frac in zip(ids, cfgs, upload_fracs):
+            flops = (
+                model.flops_per_sample() * int(sizes[int(cid)]) * cfg.epochs * cfg.compute_fraction
+            )
             ledger.charge_training(flops)
             ledger.charge_download(n_params, cfg.download_fraction)
-            ledger.charge_upload(n_params, upload_fracs[-1])
+            ledger.charge_upload(n_params, frac)
 
-        weights = aggregation_weights(sizes[ids])
-        params = aggregate(params, updates, weights)
+        # --- Eq. 4 aggregation from the shared flat buffer ------------------
+        weights = jnp.asarray(aggregation_weights(sizes[ids]), jnp.float32)
+        params = unflatten(w_before + weights @ update_matrix)
 
-        update_matrix = np.stack(
-            [np.asarray(flatten_pytree(u)[0]) for u in updates]
-        )
-        stop = strategy.post_round(t, np.asarray(w_before), ids, update_matrix, stats)
+        # post_round receives DEVICE arrays: no host bounce between
+        # aggregation, relationship modeling, and early stopping.
+        stop = strategy.post_round(t, w_before, ids, update_matrix, stats)
         ledger.end_round()
 
-        if (t % eval_every == 0) or stop or (t == max_rounds - 1):
-            acc = float(eval_fn(params, jnp.asarray(dataset.eval_x), jnp.asarray(dataset.eval_y)))
+        evaluated = (t % eval_every == 0) or stop or (t == max_rounds - 1)
+        if evaluated:
+            acc = float(eval_fn(params, eval_x, eval_y))
+            last_eval_acc = acc
         else:
-            acc = records[-1].accuracy if records else 0.0
+            acc = last_eval_acc
         rec = RoundRecord(
             t=t,
             accuracy=acc,
@@ -155,6 +237,7 @@ def run_federated(
             exploited=strategy.last_round_was_exploit,
             stopped=bool(stop),
             wall_s=time.time() - t0,
+            evaluated=evaluated,
         )
         records.append(rec)
         if verbose:
@@ -166,10 +249,12 @@ def run_federated(
             stopped = True
             break
 
+    # the terminal round (stop or max_rounds) is always freshly evaluated
+    final_accuracy = next(r.accuracy for r in reversed(records) if r.evaluated)
     return FLResult(
         strategy=strategy.name,
         records=records,
-        final_accuracy=records[-1].accuracy,
+        final_accuracy=final_accuracy,
         rounds_run=len(records),
         stopped_early=stopped,
         ledger=ledger,

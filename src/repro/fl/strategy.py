@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Optional, Tuple
 
+import jax
 import numpy as np
 
 PyTree = Any
@@ -50,15 +51,31 @@ class Strategy:
         """Returns (possibly compressed update, upload byte fraction)."""
         return update, 1.0
 
+    @property
+    def processes_updates(self) -> bool:
+        """True ⇒ process_update is overridden (compression etc.); the batched
+        engine then materializes per-client pytrees for it instead of using
+        the device-resident flat update matrix directly.  Derived, so a new
+        compression strategy cannot silently skip its own processing."""
+        return type(self).process_update is not Strategy.process_update
+
     # -- per-round bookkeeping + stop ----------------------------------------
     def post_round(
         self,
         t: int,
-        w_before: np.ndarray,        # flattened global model sent this round
+        w_before: jax.Array,         # (D,) flattened global model sent this
+        #                              round — a DEVICE array (fp32)
         client_ids: np.ndarray,
-        update_matrix: np.ndarray,   # (P, D) flattened processed updates
+        update_matrix: jax.Array,    # (P, D) flattened processed updates —
+        #                              a DEVICE array shared with aggregation
         stats: list,
     ) -> bool:
+        """Called once per round with the round's shared flat device buffers.
+
+        Implementations must NOT assume NumPy inputs: the engine keeps these
+        on device so relationship modeling and early stopping run without a
+        host round-trip.  ``np.asarray`` works if host values are needed.
+        """
         return False
 
     # hooks for engine-visible metadata

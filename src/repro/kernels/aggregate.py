@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax>=0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_D = 4096
 
 
@@ -63,6 +66,6 @@ def weighted_aggregate(
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
     )(w.reshape(1, dp), updates, weights.reshape(1, p))
     return out[0, :d]

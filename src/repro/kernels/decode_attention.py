@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax>=0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_S = 512
 _NEG_INF = -1e30
 
@@ -119,5 +122,5 @@ def decode_attention(
             pltpu.VMEM((kv, group, hd), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel", "arbitrary")),
     )(length.reshape(b, 1).astype(jnp.int32), q, k_cache, v_cache)

@@ -15,13 +15,28 @@ VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax>=0.5 renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK_D = 2048
+
+
+def default_interpret() -> bool:
+    """Compile through Mosaic only on TPU; interpret everywhere else.
+
+    These kernels carry TPU compiler params (and TPU memory spaces), so only
+    the TPU backend can compile them; on CPU/GPU the interpreter — which
+    still jit-lowers to XLA and validates the exact blocked algorithm — is
+    the correct default.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _gram_kernel(u_ref, out_ref):
@@ -38,12 +53,17 @@ def _gram_kernel(u_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gram(u: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True) -> jax.Array:
+def gram(
+    u: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: Optional[bool] = None
+) -> jax.Array:
     """Gram matrix ``u @ u.T`` in fp32 via a D-blocked Pallas kernel.
 
     ``u``: (P, D).  D is zero-padded to a multiple of ``block_d`` (zero columns
-    do not change the Gram matrix).
+    do not change the Gram matrix).  ``interpret=None`` resolves from the
+    detected JAX backend (compiled on TPU, interpreted elsewhere).
     """
+    if interpret is None:
+        interpret = default_interpret()
     p, d = u.shape
     pad = (-d) % block_d
     if pad:
@@ -57,7 +77,7 @@ def gram(u: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True
         out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
     )(u)
 
 
@@ -77,10 +97,14 @@ def _xgram_kernel(u_ref, v_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def cross_gram(
-    u: jax.Array, v: jax.Array, *, block_d: int = DEFAULT_BLOCK_D, interpret: bool = True
+    u: jax.Array, v: jax.Array, *, block_d: int = DEFAULT_BLOCK_D,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Cross Gram ``u @ v.T`` for (P, D) x (Q, D) — used by asynchronous RM
-    (dots of fresh updates against the stored update/anchor maps)."""
+    (dots of fresh updates against the stored update/anchor maps).
+    ``interpret=None`` resolves from the detected JAX backend."""
+    if interpret is None:
+        interpret = default_interpret()
     if u.shape[1] != v.shape[1]:
         raise ValueError(f"dim mismatch {u.shape} vs {v.shape}")
     p, d = u.shape
@@ -100,5 +124,5 @@ def cross_gram(
         out_specs=pl.BlockSpec((p, q), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((p, q), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
     )(u, v)

@@ -1,8 +1,10 @@
 """Jit'd public wrappers for every Pallas kernel.
 
-On this CPU container the kernels run with ``interpret=True`` (the kernel body
-executes in Python, validating the exact blocked algorithm); on a real TPU set
-``REPRO_PALLAS_INTERPRET=0`` to compile through Mosaic.
+``interpret`` defaults from the detected JAX backend: compiled through Mosaic
+on TPU, interpreted (the kernel body traces to XLA ops, validating the exact
+blocked algorithm) on CPU/GPU — the kernels carry TPU compiler params, so
+only the TPU backend can compile them.  ``REPRO_PALLAS_INTERPRET=0|1``
+overrides the detection either way.
 """
 from __future__ import annotations
 
@@ -17,7 +19,10 @@ from repro.kernels import topk_mask as _topk_mask
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return _gram.default_interpret()
 
 
 def gram(u: jax.Array, *, block_d: int = _gram.DEFAULT_BLOCK_D) -> jax.Array:

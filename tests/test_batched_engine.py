@@ -1,0 +1,262 @@
+"""Batched-engine equivalence suite (DESIGN.md §Engine).
+
+The batched engine (vmap-over-clients / scan-over-steps) must reproduce the
+sequential reference within fp32 tolerance for every local-training variant,
+and the fused Gram-kernel ``relationship_block`` must match the per-row
+Algorithm 1 recurrence — these are the contracts that let the production
+path replace the reference.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import relationship_block, relationship_row
+from repro.core.server import FLrceServer
+from repro.data import make_federated_classification, make_image_like
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import Dropout, FedAvg, Fedcom, Fedprox, QuantizedFL, TimelyFL
+from repro.fl.client import BatchedCohortTrainer, ClientTrainer, build_cohort_plan
+from repro.models.cnn import MLPClassifier, PaperCNN, param_count
+
+
+@pytest.fixture(scope="module")
+def tiny_fed():
+    ds = make_federated_classification(
+        num_clients=8, alpha=0.2, num_samples=800, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    return ds, MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+
+
+@pytest.fixture(scope="module")
+def cnn_fed():
+    ds = make_image_like(num_clients=6, num_samples=360, num_eval=60,
+                         side=8, channels=1, num_classes=3, seed=0)
+    model = PaperCNN(side=8, channels=1, num_classes=3, num_fc=2,
+                     conv_channels=(4, 8), fc_width=16)
+    return ds, model
+
+
+def _run_both(model, ds, make_strategy, **kw):
+    out = {}
+    for eng in ("sequential", "batched"):
+        out[eng] = run_federated(model, ds, make_strategy(), engine=eng, **kw)
+    return out["sequential"], out["batched"]
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence through run_federated
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls,kw", [
+    (FedAvg, {}),
+    (Fedprox, {"mu": 0.01}),
+    (Dropout, {"keep_rate": 0.6}),
+    (TimelyFL, {}),
+])
+def test_engines_match_per_variant(tiny_fed, cls, kw):
+    ds, model = tiny_fed
+    seq, bat = _run_both(
+        model, ds, lambda: cls(8, 3, 2, seed=0, **kw),
+        max_rounds=3, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    np.testing.assert_allclose(seq.accuracy_curve(), bat.accuracy_curve(), atol=2e-3)
+    for a, b in zip(seq.records, bat.records):
+        assert a.selected == b.selected
+        assert a.mean_client_loss == pytest.approx(b.mean_client_loss, abs=1e-5)
+    # the ledger is pure host bookkeeping over identical selections/configs
+    assert seq.ledger.energy_j == pytest.approx(bat.ledger.energy_j, rel=1e-12)
+    assert seq.ledger.total_bytes == pytest.approx(bat.ledger.total_bytes, rel=1e-12)
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (Fedcom, {"keep_frac": 0.2}),
+    (QuantizedFL, {}),
+])
+def test_compression_strategies_through_batched_engine(tiny_fed, cls, kw):
+    """processes_updates strategies route per-client pytrees through
+    process_update; both engines must agree on bytes and results."""
+    ds, model = tiny_fed
+    seq, bat = _run_both(
+        model, ds, lambda: cls(8, 3, 1, seed=0, **kw),
+        max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    np.testing.assert_allclose(seq.accuracy_curve(), bat.accuracy_curve(), atol=2e-3)
+    assert seq.ledger.bytes_up == pytest.approx(bat.ledger.bytes_up, rel=1e-12)
+
+
+def test_engines_match_flrce_full_loop(tiny_fed):
+    """FLrce exercises the whole refactor: batched training, fused ingest,
+    device post_round, early stopping."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    seq, bat = _run_both(
+        model, ds, lambda: FLrce(8, 3, 2, dim=dim, es_threshold=2.0, seed=0),
+        max_rounds=5, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    assert [r.selected for r in seq.records] == [r.selected for r in bat.records]
+    np.testing.assert_allclose(seq.accuracy_curve(), bat.accuracy_curve(), atol=2e-3)
+    assert seq.rounds_run == bat.rounds_run
+    assert seq.stopped_early == bat.stopped_early
+
+
+def test_cohort_trainer_matches_sequential_on_cnn_mixed_variants(cnn_fed):
+    """One batched call with a MIXED cohort (plain / prox / mask / freeze)
+    reproduces per-client sequential updates, losses, and step counts."""
+    ds, model = cnn_fed
+    params = model.init(jax.random.PRNGKey(3))
+    batch_size = 16
+    ids = [0, 1, 2, 3]
+    epochs = [2, 1, 2, 1]
+    # client 2 combines mask AND prox: the prox term must be computed on the
+    # masked params in both engines (ClientTrainer rebinds p before it)
+    prox_mus = [0.0, 0.05, 0.03, 0.0]
+    freeze_fracs = [0.0, 0.0, 0.0, 0.4]
+    mask_rng = np.random.default_rng(7)
+    masks = [None, None, None, None]
+    masks[2] = jax.tree_util.tree_map(
+        lambda l: jnp.asarray(mask_rng.random(l.shape) < 0.5, l.dtype)
+        if l.ndim >= 2 else jnp.ones_like(l),
+        params,
+    )
+
+    # sequential reference
+    seq_tr = ClientTrainer(model, 0.05, batch_size)
+    rng = np.random.default_rng(0)
+    seq_updates, seq_stats = [], []
+    from repro.core.distributed import flatten_pytree
+    for pos, cid in enumerate(ids):
+        x, y = ds.client_data(cid)
+        u, st = seq_tr.local_update(
+            params, x, y, epochs[pos], rng,
+            prox_mu=prox_mus[pos], mask=masks[pos], freeze_frac=freeze_fracs[pos],
+        )
+        seq_updates.append(np.asarray(flatten_pytree(u)[0]))
+        seq_stats.append(st)
+    seq_matrix = np.stack(seq_updates)
+
+    # batched path, same host-RNG consumption
+    bat_tr = BatchedCohortTrainer(model, 0.05, batch_size)
+    rng2 = np.random.default_rng(0)
+    plan = build_cohort_plan(
+        [ds.client_data(c) for c in ids], epochs, batch_size, rng2
+    )
+    _, bat_matrix, bat_stats = bat_tr.train_cohort(
+        params, plan, prox_mus=prox_mus, masks=masks, freeze_fracs=freeze_fracs,
+    )
+    scale = np.abs(seq_matrix).max()
+    np.testing.assert_allclose(
+        np.asarray(bat_matrix), seq_matrix, atol=max(1e-5, 1e-4 * scale), rtol=1e-3
+    )
+    for s_seq, s_bat in zip(seq_stats, bat_stats):
+        assert s_seq["steps"] == s_bat["steps"]
+        assert s_seq["samples_processed"] == s_bat["samples_processed"]
+        assert s_seq["mean_loss"] == pytest.approx(s_bat["mean_loss"], abs=1e-4)
+        assert s_seq["final_loss"] == pytest.approx(s_bat["final_loss"], abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused relationship block vs per-row Algorithm 1
+# ---------------------------------------------------------------------------
+def test_relationship_block_matches_rows_mixed_freshness():
+    rng = np.random.default_rng(0)
+    m, d, t, k = 9, 48, 7, 4
+    ids = np.array([1, 3, 6, 8])
+    u = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    # maps with the fresh rows already written (Alg. 4 line 10)
+    updates = jnp.asarray(rng.normal(size=(m, d)), jnp.float32).at[ids].set(u)
+    anchors = jnp.asarray(rng.normal(size=(m, d)), jnp.float32).at[ids].set(w[None])
+    last = jnp.asarray([t, t, t - 1, t, 2, -1, t, 0, t], jnp.int32)
+    omega = jnp.asarray(0.2 * rng.normal(size=(m, m)), jnp.float32)
+    want = jnp.stack([
+        relationship_row(int(c), u[i], w, updates, anchors, last, t, omega[int(c)])
+        for i, c in enumerate(ids)
+    ])
+    got = relationship_block(
+        jnp.asarray(ids), u, w, updates, anchors, last, t, omega[jnp.asarray(ids)]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=5e-5)
+    # bounded like the per-row reference
+    assert np.all(np.asarray(got) <= 1.0 + 1e-5)
+    assert np.all(np.asarray(got) >= -1.0 - 1e-5)
+
+
+def test_server_ingest_matches_per_row_reference():
+    """FLrceServer.ingest (fused) == the seed's per-row ingest loop."""
+    rng = np.random.default_rng(1)
+    m, d, p = 6, 32, 3
+    server = FLrceServer(num_clients=m, dim=d, clients_per_round=p, es_threshold=2.0, seed=0)
+    omega_ref = jnp.zeros((m, m), jnp.float32)
+    updates_ref = jnp.zeros((m, d), jnp.float32)
+    anchors_ref = jnp.zeros((m, d), jnp.float32)
+    last_ref = jnp.full((m,), -1, jnp.int32)
+    w = jnp.zeros((d,), jnp.float32)
+    for t in range(4):
+        ids = np.sort(rng.choice(m, size=p, replace=False))
+        ups = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+        server.ingest(w, ids, ups)
+        # per-row reference recurrence (the seed implementation)
+        updates_ref = updates_ref.at[ids].set(ups)
+        anchors_ref = anchors_ref.at[ids].set(w[None, :])
+        last_ref = last_ref.at[ids].set(t)
+        for pos, c in enumerate(ids):
+            row = relationship_row(
+                int(c), ups[pos], w, updates_ref, anchors_ref, last_ref, t,
+                omega_ref[int(c)],
+            )
+            omega_ref = omega_ref.at[int(c)].set(row)
+        np.testing.assert_allclose(
+            np.asarray(server.state.omega), np.asarray(omega_ref), atol=5e-5
+        )
+        server.advance_round()
+        w = w + 0.1 * jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+
+def test_server_ingest_has_no_per_client_loop():
+    """Ω refresh must go through the fused relationship_block, not a Python
+    loop over relationship_row (the acceptance criterion of the refactor)."""
+    import inspect
+
+    src = inspect.getsource(FLrceServer.ingest)
+    assert "relationship_block" in src
+    assert "relationship_row" not in src
+    assert "for " not in src
+
+
+# ---------------------------------------------------------------------------
+# stale-accuracy bookkeeping (eval_every > 1)
+# ---------------------------------------------------------------------------
+def test_eval_every_marks_skipped_rounds_and_evaluates_terminal(tiny_fed):
+    ds, model = tiny_fed
+    res = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0),
+        max_rounds=5, learning_rate=0.1, batch_size=16, seed=0, eval_every=3,
+    )
+    flags = [r.evaluated for r in res.records]
+    assert flags == [True, False, False, True, True]  # t=0, t=3, terminal t=4
+    # skipped rounds carry the last fresh evaluation, flagged as stale
+    assert res.records[1].accuracy == res.records[0].accuracy
+    assert res.records[2].accuracy == res.records[0].accuracy
+    # final_accuracy comes from a freshly evaluated round
+    assert res.records[-1].evaluated
+    assert res.final_accuracy == res.records[-1].accuracy
+
+
+def test_eval_every_terminal_round_evaluated_on_early_stop(tiny_fed):
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    strat = FLrce(8, 3, 1, dim=dim, es_threshold=1e-6, explore_decay=0.01, seed=0)
+    res = run_federated(
+        model, ds, strat, max_rounds=40, learning_rate=0.8, batch_size=16,
+        seed=0, eval_every=1000,   # never evaluate except t=0 and the stop round
+    )
+    assert res.stopped_early
+    assert res.records[-1].evaluated
+    assert res.final_accuracy == res.records[-1].accuracy
+
+
+def test_unknown_engine_rejected(tiny_fed):
+    ds, model = tiny_fed
+    with pytest.raises(ValueError, match="engine"):
+        run_federated(model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=1, engine="turbo")

@@ -1,14 +1,12 @@
-"""Unit tests for relationship modeling (paper Eq. 5/6, Algorithm 1)."""
+"""Unit tests for relationship modeling (paper Eq. 5/6, Algorithm 1).
+
+Hypothesis property tests live in test_properties.py (dev-only dependency).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import async_relationship, cossim, orthdist, relationship_row
-
-finite_vec = st.lists(
-    st.floats(-10, 10, allow_nan=False, width=32), min_size=2, max_size=8
-)
 
 
 def test_cossim_basic():
@@ -17,25 +15,6 @@ def test_cossim_basic():
     assert float(cossim(u, u)) == pytest.approx(1.0, abs=1e-6)
     assert float(cossim(u, v)) == pytest.approx(0.0, abs=1e-6)
     assert float(cossim(u, -u)) == pytest.approx(-1.0, abs=1e-6)
-
-
-@settings(max_examples=50, deadline=None)
-@given(finite_vec, finite_vec)
-def test_cossim_symmetric_and_bounded(a, b):
-    n = min(len(a), len(b))
-    u, v = jnp.asarray(a[:n]), jnp.asarray(b[:n])
-    c1, c2 = float(cossim(u, v)), float(cossim(v, u))
-    assert c1 == pytest.approx(c2, abs=1e-5)
-    assert -1.0 - 1e-5 <= c1 <= 1.0 + 1e-5
-
-
-@settings(max_examples=30, deadline=None)
-@given(finite_vec, st.floats(0.1, 100.0))
-def test_cossim_scale_invariant(a, s):
-    u = jnp.asarray(a)
-    assert float(cossim(u, u * s)) == pytest.approx(
-        float(cossim(u, u)), abs=1e-4
-    )
 
 
 def test_orthdist_2d_geometry():
@@ -48,19 +27,6 @@ def test_orthdist_2d_geometry():
     # anchored ray
     d = orthdist(jnp.array([5.0, 2.0]), jnp.array([5.0, 0.0]), jnp.array([0.0, 0.0]) + jnp.array([1.0, 0.0]))
     assert float(d) == pytest.approx(2.0, abs=1e-6)
-
-
-@settings(max_examples=30, deadline=None)
-@given(finite_vec, st.floats(0.5, 20.0))
-def test_orthdist_direction_scale_invariant(a, s):
-    """orthdist depends only on the ray, not the direction's magnitude."""
-    n = len(a)
-    x = jnp.asarray(a)
-    anchor = jnp.zeros(n)
-    direction = jnp.ones(n)
-    d1 = float(orthdist(x, anchor, direction))
-    d2 = float(orthdist(x, anchor, direction * s))
-    assert d1 == pytest.approx(d2, rel=1e-4, abs=1e-5)
 
 
 def test_async_relationship_signs():
@@ -97,24 +63,3 @@ def test_relationship_row_sync_vs_async_dispatch():
     assert float(row[3]) == pytest.approx(0.123)
     # self entry keeps its previous value
     assert float(row[0]) == pytest.approx(0.123)
-
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 10))
-def test_relationship_row_bounded(m, d, t):
-    rng = np.random.default_rng(m * 100 + d)
-    updates = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
-    anchors = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
-    last = jnp.asarray(rng.integers(-1, t + 1, size=m), jnp.int32)
-    row = relationship_row(
-        0,
-        updates[0],
-        jnp.asarray(rng.normal(size=(d,)), jnp.float32),
-        updates,
-        anchors,
-        last,
-        t,
-        jnp.zeros((m,), jnp.float32),
-    )
-    assert np.all(np.asarray(row) <= 1.0 + 1e-5)
-    assert np.all(np.asarray(row) >= -1.0 - 1e-5)

@@ -1,9 +1,11 @@
-"""Unit tests for selection (Alg. 2) and early stopping (Alg. 3)."""
+"""Unit tests for selection (Alg. 2) and early stopping (Alg. 3).
+
+Hypothesis property tests live in test_properties.py (dev-only dependency).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     conflict_degree,
@@ -25,20 +27,6 @@ def test_top_p_stable_tiebreak():
     h = jnp.array([1.0, 3.0, 3.0, 0.5])
     ids = np.asarray(top_p_by_heuristic(h, 2))
     assert set(ids) == {1, 2}  # ties broken by id
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 20), st.integers(1, 10), st.integers(0, 200))
-def test_select_returns_p_distinct(m, p, t):
-    if p > m:
-        p = m
-    rng = jax.random.PRNGKey(t)
-    h = jnp.asarray(np.random.default_rng(m).normal(size=m), jnp.float32)
-    ids, exploited = select_clients(rng, h, t, p)
-    ids = np.asarray(ids)
-    assert len(ids) == p
-    assert len(set(ids.tolist())) == p
-    assert ids.min() >= 0 and ids.max() < m
 
 
 def test_late_rounds_exploit_top_p():
@@ -75,18 +63,6 @@ def test_should_stop_only_on_exploit_rounds():
     d_exploit = should_stop(u, psi=0.5, is_exploit_round=True)
     assert d_exploit.stop
     assert d_exploit.conflicts == pytest.approx(1.0)
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.integers(2, 8), st.floats(0.0, 4.0))
-def test_es_monotone_in_psi(p, psi):
-    """If ES fires at threshold psi it must also fire at any psi' < psi."""
-    rng = np.random.default_rng(p)
-    u = jnp.asarray(rng.normal(size=(p, 5)), jnp.float32)
-    d_hi = should_stop(u, psi=psi, is_exploit_round=True)
-    d_lo = should_stop(u, psi=psi * 0.5, is_exploit_round=True)
-    if d_hi.stop:
-        assert d_lo.stop
 
 
 def test_paper_figure9_example():

@@ -1,11 +1,13 @@
-"""Data pipeline, optimizer and checkpoint tests (incl. hypothesis properties)."""
+"""Data pipeline, optimizer and checkpoint tests.
+
+Hypothesis property tests live in test_properties.py (dev-only dependency).
+"""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import (
     restore_pytree,
@@ -28,16 +30,6 @@ from repro.optim.schedules import cosine_decay, linear_warmup_cosine
 # ---------------------------------------------------------------------------
 # partitioner
 # ---------------------------------------------------------------------------
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 12), st.floats(0.05, 5.0), st.integers(0, 5))
-def test_label_partition_covers_everything(clients, alpha, seed):
-    labels = np.random.default_rng(seed).integers(0, 5, size=500)
-    parts = dirichlet_label_partition(labels, clients, alpha=alpha, seed=seed)
-    allidx = np.concatenate(parts)
-    assert len(allidx) == 500
-    assert len(np.unique(allidx)) == 500  # disjoint cover
-
-
 def test_low_alpha_is_more_skewed_than_high_alpha():
     labels = np.random.default_rng(0).integers(0, 10, size=5000)
     lo = dirichlet_label_partition(labels, 20, alpha=0.05, seed=1)

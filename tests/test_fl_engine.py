@@ -1,9 +1,11 @@
-"""FL engine tests: aggregation math, ledger accounting, all baselines."""
+"""FL engine tests: aggregation math, ledger accounting, all baselines.
+
+Hypothesis property tests live in test_properties.py (dev-only dependency).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.data import make_federated_classification
 from repro.fl import run_federated
@@ -31,14 +33,6 @@ def test_aggregation_weights_eq4():
     w = aggregation_weights([10, 30, 60])
     np.testing.assert_allclose(w, [0.1, 0.3, 0.6], rtol=1e-6)
     assert w.sum() == pytest.approx(1.0)
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.integers(1, 1000), min_size=1, max_size=10))
-def test_aggregation_weights_simplex(counts):
-    w = aggregation_weights(counts)
-    assert w.sum() == pytest.approx(1.0, abs=1e-5)
-    assert (w >= 0).all()
 
 
 def test_aggregate_matches_eq4_leafwise():
