@@ -1,28 +1,32 @@
-"""Round-engine benchmark: sequential reference vs batched vmap/scan engine.
+"""Round-engine benchmark: sequential reference vs batched vs mesh-sharded.
 
 The batched engine's claim (DESIGN.md §Engine) is that one fused device
-program per round beats O(clients × steps) Python dispatches.  This benchmark
-measures wall-clock per round for a 16-client × 50-step cohort (n=800
-samples/client, batch 32, 2 local epochs ⇒ 50 SGD steps each) and reports
-the speedup; the refactor's acceptance bar is ≥2× on CPU.
+program per round beats O(clients × steps) Python dispatches; the sharded
+engine's claim is that the same round scales across a (data, model) mesh.
+This benchmark measures wall-clock per round for a 16-client × 50-step
+cohort (n=800 samples/client, batch 32, 2 local epochs ⇒ 50 SGD steps each)
+and writes machine-readable throughput to ``BENCH_engine.json``.
 
     PYTHONPATH=src python benchmarks/engine.py            # timed comparison
-    PYTHONPATH=src python benchmarks/engine.py --smoke    # CI: 3-round batched run
+    PYTHONPATH=src python benchmarks/engine.py --smoke    # CI: 3-round run
+
+Force a real multi-device mesh on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the sharded engine
+also runs — and is verified — on a single-device (1, 1) mesh).
 
 The first round of each engine is warmup (jit compilation) and excluded.
+The acceptance bar (batched ≥2× sequential on CPU) is unchanged; the
+sharded engine is reported, not gated — on host CPU the collectives are
+emulated, so its numbers only become meaningful on a real mesh.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 import numpy as np
-
-from repro.data import make_federated_classification
-from repro.fl import run_federated
-from repro.fl.baselines import FedAvg
-from repro.models.cnn import MLPClassifier
 
 CLIENTS = 16
 BATCH = 32
@@ -31,6 +35,8 @@ SAMPLES_PER_CLIENT = 800          # 800/32 * 2 epochs = 50 steps per client
 
 
 def _dataset(num_clients: int, samples_per_client: int):
+    from repro.data import make_federated_classification
+
     ds = make_federated_classification(
         num_clients=num_clients,
         alpha=1e6,                 # ~uniform: every client gets the same n,
@@ -44,10 +50,14 @@ def _dataset(num_clients: int, samples_per_client: int):
     return ds
 
 
-def run(engine: str, ds, model, rounds: int):
+def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
+        epochs: int = EPOCHS):
+    from repro.fl import run_federated
+    from repro.fl.baselines import FedAvg
+
     t0 = time.time()
     res = run_federated(
-        model, ds, FedAvg(CLIENTS, CLIENTS, EPOCHS, seed=0),
+        model, ds, FedAvg(clients, clients, epochs, seed=0),
         max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
         engine=engine,
     )
@@ -58,38 +68,70 @@ def run(engine: str, ds, model, rounds: int):
     return res, wall, per_round
 
 
+def write_report(path: str, per_round: dict, meta: dict) -> None:
+    import jax
+
+    report = {
+        "benchmark": "engine",
+        "devices": jax.device_count(),
+        "backend": jax.default_backend(),
+        **meta,
+        "engines": {
+            eng: {"s_per_round": s, "rounds_per_s": (1.0 / s if s > 0 else None)}
+            for eng, s in per_round.items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: assert a 3-round batched run completes")
+                    help="CI mode: assert 3-round batched+sharded runs complete")
     ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_engine.json",
+                    help="machine-readable throughput report path")
     args = ap.parse_args(argv)
+
+    from repro.models.cnn import MLPClassifier
 
     model = MLPClassifier(feature_dim=32, num_classes=10, hidden=(64, 64))
 
     if args.smoke:
         ds = _dataset(4, 128)
-        res = run_federated(
-            model, ds, FedAvg(4, 4, 1, seed=0),
-            max_rounds=3, learning_rate=0.05, batch_size=BATCH, seed=0,
-            engine="batched",
-        )
-        assert res.rounds_run == 3, res.rounds_run
-        assert np.isfinite(res.final_accuracy), res.final_accuracy
-        assert res.records[-1].evaluated
-        print(f"engine-smoke OK: 3 batched rounds, acc={res.final_accuracy:.3f}")
+        per_round = {}
+        accs = {}
+        for engine in ("batched", "sharded"):
+            res, _, per_round[engine] = run(engine, ds, model, 3, clients=4,
+                                            epochs=1)
+            assert res.rounds_run == 3, (engine, res.rounds_run)
+            assert np.isfinite(res.final_accuracy), (engine, res.final_accuracy)
+            assert res.records[-1].evaluated
+            accs[engine] = res.final_accuracy
+        assert abs(accs["batched"] - accs["sharded"]) < 2e-3, accs
+        write_report(args.out, per_round,
+                     {"mode": "smoke", "clients": 4, "steps": 4})
+        print(f"engine-smoke OK: 3 batched+sharded rounds, "
+              f"acc={accs['batched']:.3f}")
         return 0
 
     ds = _dataset(CLIENTS, SAMPLES_PER_CLIENT)
     steps = SAMPLES_PER_CLIENT // BATCH * EPOCHS
     print(f"cohort: {CLIENTS} clients x {steps} steps (batch {BATCH})")
 
-    _, _, seq_round = run("sequential", ds, model, args.rounds)
-    print(f"sequential: {seq_round*1e3:8.1f} ms/round")
-    _, _, bat_round = run("batched", ds, model, args.rounds)
-    print(f"batched:    {bat_round*1e3:8.1f} ms/round")
-    speedup = seq_round / bat_round
-    print(f"speedup:    {speedup:8.2f}x")
+    per_round = {}
+    for engine in ("sequential", "batched", "sharded"):
+        _, _, per_round[engine] = run(engine, ds, model, args.rounds)
+        print(f"{engine + ':':12s}{per_round[engine] * 1e3:8.1f} ms/round")
+    speedup = per_round["sequential"] / per_round["batched"]
+    print(f"batched speedup: {speedup:8.2f}x")
+    print(f"sharded vs batched: "
+          f"{per_round['batched'] / per_round['sharded']:8.2f}x")
+    write_report(args.out, per_round,
+                 {"mode": "timed", "clients": CLIENTS, "steps": steps})
     if speedup < 2.0:
         print("WARNING: batched engine below the 2x acceptance bar", file=sys.stderr)
         return 1

@@ -1,5 +1,10 @@
 """FLrce core: the paper's contribution (relationship-based selection + ES)."""
-from repro.core.early_stopping import ESDecision, conflict_degree, should_stop
+from repro.core.early_stopping import (
+    ESDecision,
+    conflict_degree,
+    should_stop,
+    should_stop_from_gram,
+)
 from repro.core.heuristics import heuristic_from_omega, update_heuristic_rows
 from repro.core.relationship import (
     async_relationship,
@@ -7,6 +12,8 @@ from repro.core.relationship import (
     orthdist,
     relationship_block,
     relationship_row,
+    rows_from_relationship_dots,
+    sharded_relationship_block,
     sync_relationship,
 )
 from repro.core.selection import explore_probability, select_clients, top_p_by_heuristic
@@ -16,6 +23,7 @@ __all__ = [
     "ESDecision",
     "conflict_degree",
     "should_stop",
+    "should_stop_from_gram",
     "heuristic_from_omega",
     "update_heuristic_rows",
     "async_relationship",
@@ -23,6 +31,8 @@ __all__ = [
     "orthdist",
     "relationship_block",
     "relationship_row",
+    "rows_from_relationship_dots",
+    "sharded_relationship_block",
     "sync_relationship",
     "explore_probability",
     "select_clients",

@@ -111,8 +111,35 @@ def async_relationship_from_dots(
 # ---------------------------------------------------------------------------
 # Sharded reductions
 # ---------------------------------------------------------------------------
+def mesh_axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    """Total number of D-shards: the product of the mesh sizes of ``axes``."""
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def pad_dim(d: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= d."""
+    return -(-int(d) // int(multiple)) * int(multiple)
+
+
+def _pad_last(x: jax.Array, to: int) -> jax.Array:
+    """Zero-pad the trailing (D) axis to ``to`` columns.
+
+    Exact for every reduction here: padded columns contribute 0 to all inner
+    products and the padded tail of an aggregated vector is never read.
+    """
+    d = x.shape[-1]
+    if d == to:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, to - d)]
+    return jnp.pad(x, widths)
+
+
 def sharded_gram(u: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
-    """``u @ u.T`` for (P, D) with D sharded over ``axes``; result replicated."""
+    """``u @ u.T`` for (P, D) with D sharded over ``axes``; result replicated.
+
+    D is zero-padded to a multiple of the shard count, so ragged dims work.
+    """
+    u = _pad_last(u, pad_dim(u.shape[-1], mesh_axes_size(mesh, axes)))
 
     def local(u_shard):
         g = kops.gram(u_shard)
@@ -122,6 +149,9 @@ def sharded_gram(u: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
 
 
 def sharded_cross_gram(u: jax.Array, v: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
+    d_pad = pad_dim(u.shape[-1], mesh_axes_size(mesh, axes))
+    u, v = _pad_last(u, d_pad), _pad_last(v, d_pad)
+
     def local(u_shard, v_shard):
         g = kops.cross_gram(u_shard, v_shard)
         return jax.lax.psum(g, axes)
@@ -133,11 +163,57 @@ def sharded_aggregate(
     w: jax.Array, updates: jax.Array, weights: jax.Array, mesh: Mesh, axes: Tuple[str, ...]
 ) -> jax.Array:
     """Eq. 4 on D-sharded vectors; no cross-shard traffic (weights replicated)."""
+    d = w.shape[-1]
+    d_pad = pad_dim(d, mesh_axes_size(mesh, axes))
+    w, updates = _pad_last(w, d_pad), _pad_last(updates, d_pad)
 
     def local(w_shard, u_shard, p_full):
         return kops.weighted_aggregate(w_shard, u_shard, p_full)
 
-    return _shard_map(local, mesh, (P(axes), P(None, axes), P(None)), P(axes))(w, updates, weights)
+    out = _shard_map(local, mesh, (P(axes), P(None, axes), P(None)), P(axes))(w, updates, weights)
+    return out if d == d_pad else out[:d]
+
+
+def sharded_relationship_dots(
+    u: jax.Array,      # (K, D) fresh updates
+    w: jax.Array,      # (D,)   global model
+    v: jax.Array,      # (M, D) update map V
+    a: jax.Array,      # (M, D) anchor map A
+    mesh: Mesh,
+    axes: Tuple[str, ...],
+):
+    """Every inner product ``relationship_block`` needs, in ONE shard_map.
+
+    Per shard: two Pallas cross-Gram contractions plus O(M) vector dots; one
+    fused psum reduces all nine results across the D-shards.  Returns the
+    replicated tuple ``(uv, ua, uw, vw, aw, vv, av, aa, ww)`` — see
+    ``repro.core.relationship.rows_from_relationship_dots`` for the meaning
+    of each.
+    """
+    d_pad = pad_dim(u.shape[-1], mesh_axes_size(mesh, axes))
+    u, v, a = _pad_last(u, d_pad), _pad_last(v, d_pad), _pad_last(a, d_pad)
+    w = _pad_last(w, d_pad)
+
+    def local(u_s, w_s, v_s, a_s):
+        dots = (
+            kops.cross_gram(u_s, v_s),        # (K, M) ⟨u_k, v_j⟩
+            kops.cross_gram(u_s, a_s),        # (K, M) ⟨u_k, a_j⟩
+            u_s @ w_s,                        # (K,)   ⟨u_k, w⟩
+            v_s @ w_s,                        # (M,)   ⟨v_j, w⟩
+            a_s @ w_s,                        # (M,)   ⟨a_j, w⟩
+            jnp.sum(v_s * v_s, axis=1),       # (M,)   ‖v_j‖²
+            jnp.sum(a_s * v_s, axis=1),       # (M,)   ⟨a_j, v_j⟩
+            jnp.sum(a_s * a_s, axis=1),       # (M,)   ‖a_j‖²
+            jnp.vdot(w_s, w_s),               #        ‖w‖²
+        )
+        return tuple(jax.lax.psum(x, axes) for x in dots)
+
+    in_specs = (P(None, axes), P(axes), P(None, axes), P(None, axes))
+    out_specs = (
+        P(None, None), P(None, None), P(None), P(None), P(None),
+        P(None), P(None), P(None), P(),
+    )
+    return _shard_map(local, mesh, in_specs, out_specs)(u, w, v, a)
 
 
 # ---------------------------------------------------------------------------

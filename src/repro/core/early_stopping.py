@@ -45,7 +45,28 @@ def should_stop(
     """Algorithm 3.  ``updates``: (P, D) fresh updates of the selected clients."""
     if not is_exploit_round:
         return ESDecision(stop=False, conflicts=0.0, conflict_pairs=0)
-    avg = conflict_degree(updates)
-    p = updates.shape[0]
+    return _decide(conflict_degree(updates), updates.shape[0], psi)
+
+
+def should_stop_from_gram(
+    gram: jax.Array,
+    psi: float,
+    *,
+    is_exploit_round: bool,
+) -> ESDecision:
+    """Algorithm 3 when ``U Uᵀ`` is already available.
+
+    The mesh-sharded server path computes the (P, P) Gram once via
+    ``core.distributed.sharded_gram`` and never materializes U on one device;
+    conflicts only need the Gram's signs.
+    """
+    if not is_exploit_round:
+        return ESDecision(stop=False, conflicts=0.0, conflict_pairs=0)
+    from repro.core.distributed import conflict_degree_from_gram
+
+    return _decide(conflict_degree_from_gram(gram), gram.shape[0], psi)
+
+
+def _decide(avg: jax.Array, p: int, psi: float) -> ESDecision:
     pairs = int(round(float(avg) * p))
     return ESDecision(stop=bool(avg >= psi), conflicts=float(avg), conflict_pairs=pairs)

@@ -149,19 +149,14 @@ def relationship_block(
     (``gram(U)``'s diagonal) come for free from ``cross_gram(U, V)``: row
     ``ids[k]`` of V *is* ``u_k``.
     """
-    from repro.core.distributed import async_relationship_from_dots
-
     u32 = u.astype(jnp.float32)
     v32 = updates.astype(jnp.float32)
     a32 = anchors.astype(jnp.float32)
     w32 = w_t.astype(jnp.float32)
-    k = u.shape[0]
-    arange_k = jnp.arange(k)
 
     # --- kernel-backed O(K·M·D) reductions --------------------------------
     uv = kops.cross_gram(u32, v32)                      # (K,M) ⟨u_k, v_j⟩
     ua = kops.cross_gram(u32, a32)                      # (K,M) ⟨u_k, a_j⟩
-    pp = uv[arange_k, ids]                              # (K,)  ⟨u_k, u_k⟩
     # --- map/model and row-wise dots (O(M·D), fuse into XLA) ---------------
     uw = u32 @ w32                                      # (K,)  ⟨u_k, w⟩
     vw = v32 @ w32                                      # (M,)  ⟨v_j, w⟩
@@ -170,6 +165,61 @@ def relationship_block(
     av = jnp.sum(a32 * v32, axis=1)                     # (M,)  ⟨a_j, v_j⟩
     aa = jnp.sum(a32 * a32, axis=1)                     # (M,)  ‖a_j‖²
     ww = jnp.vdot(w32, w32)
+    return rows_from_relationship_dots(
+        ids, (uv, ua, uw, vw, aw, vv, av, aa, ww), last_rounds, t, omega_rows
+    )
+
+
+def sharded_relationship_block(
+    ids: jax.Array,
+    u: jax.Array,
+    w_t: jax.Array,
+    updates: jax.Array,
+    anchors: jax.Array,
+    last_rounds: jax.Array,
+    t: int,
+    omega_rows: jax.Array,
+    *,
+    mesh,
+    axes,
+) -> jax.Array:
+    """:func:`relationship_block` with every O(D) contraction mesh-sharded.
+
+    ``u``/``updates``/``anchors`` are (·, D) arrays D-sharded over ``axes``
+    and ``w_t`` a D-sharded (D,) vector (zero-padded dims are exact — see
+    ``core.distributed``).  The inner products reduce through ONE fused
+    shard_map (``sharded_relationship_dots``); row assembly is the same
+    O(K·M) replicated postprocessing as the local block.
+    """
+    from repro.core.distributed import sharded_relationship_dots
+
+    dots = sharded_relationship_dots(
+        u.astype(jnp.float32), w_t.astype(jnp.float32),
+        updates.astype(jnp.float32), anchors.astype(jnp.float32),
+        mesh, axes,
+    )
+    return rows_from_relationship_dots(ids, dots, last_rounds, t, omega_rows)
+
+
+def rows_from_relationship_dots(
+    ids: jax.Array,
+    dots,                     # (uv, ua, uw, vw, aw, vv, av, aa, ww)
+    last_rounds: jax.Array,
+    t: int,
+    omega_rows: jax.Array,
+) -> jax.Array:
+    """Assemble the K fresh Ω rows from the nine inner-product groups.
+
+    O(K·M) replicated work, shared by the local (Pallas kernel) and the
+    mesh-sharded dot producers.  The fresh self-dots ⟨u_k, u_k⟩ come from
+    ``uv``'s columns at ``ids`` (row ids[k] of V *is* u_k).
+    """
+    from repro.core.distributed import async_relationship_from_dots
+
+    uv, ua, uw, vw, aw, vv, av, aa, ww = dots
+    k = uv.shape[0]
+    arange_k = jnp.arange(k)
+    pp = uv[arange_k, ids]                              # (K,)  ⟨u_k, u_k⟩
 
     # --- synchronous rows (Eq. 5) -----------------------------------------
     norms_u = jnp.sqrt(jnp.maximum(pp, _EPS))           # (K,)

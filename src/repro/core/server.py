@@ -61,12 +61,52 @@ class FLrceServer:
         seed: int = 0,
     ):
         self.m = num_clients
+        self.dim = dim
         self.p = clients_per_round
         self.psi = es_threshold
         self.decay = explore_decay
         self._rng = jax.random.PRNGKey(seed)
         self.state = init_state(num_clients, dim)
         self._last_exploit = False
+        # mesh-sharded storage: set by bind_mesh (None ⇒ single-device maps)
+        self.mesh = None
+        self.mesh_axes: Tuple[str, ...] = ()
+        self.dim_pad = dim
+
+    # -- optional mesh-sharded storage ---------------------------------------
+    def bind_mesh(self, mesh, axes: Tuple[str, ...] = ("data", "model")) -> None:
+        """Move the O(D) maps (V, A) onto a device mesh, D-sharded over ``axes``.
+
+        From here on ``ingest`` reduces its inner products through ONE fused
+        shard_map (``sharded_relationship_dots``) and ``check_early_stop``
+        computes Alg. 3 from a ``sharded_gram`` — the (P, D)/(M, D) buffers are
+        never replicated.  The flat dim is zero-padded to a multiple of the
+        shard count, which is exact for every inner product.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.distributed import mesh_axes_size, pad_dim
+
+        self.mesh = mesh
+        self.mesh_axes = tuple(axes)
+        self.dim_pad = pad_dim(self.dim, mesh_axes_size(mesh, self.mesh_axes))
+        shard = NamedSharding(mesh, PartitionSpec(None, self.mesh_axes))
+        st = self.state
+        pad = self.dim_pad - st.updates.shape[1]
+        self.state = dataclasses.replace(
+            st,
+            updates=jax.device_put(jnp.pad(st.updates, ((0, 0), (0, pad))), shard),
+            anchors=jax.device_put(jnp.pad(st.anchors, ((0, 0), (0, pad))), shard),
+        )
+
+    def _shard_cols(self, x: jax.Array) -> jax.Array:
+        """Pad a (…, D) buffer to dim_pad and lay it out D-sharded."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        pad = self.dim_pad - x.shape[-1]
+        if pad:
+            x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        spec = PartitionSpec(*([None] * (x.ndim - 1)), self.mesh_axes)
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
 
     # -- Alg. 4 line 5: client selection ------------------------------------
     def select(self) -> np.ndarray:
@@ -91,26 +131,33 @@ class FLrceServer:
         st = self.state
         t = st.t
         ids = np.asarray(client_ids)
+        w32 = w_t.astype(jnp.float32)
+        u32 = client_updates.astype(jnp.float32)
+        if self.mesh is not None:
+            # D-sharded storage: pad + lay out the fresh buffers on the mesh
+            w32 = self._shard_cols(w32)
+            u32 = self._shard_cols(u32)
         # Alg. 4 writes V/A/R first (line 10), then models relationships, so a
         # pair selected in the same round is compared synchronously.
-        updates = st.updates.at[ids].set(client_updates.astype(jnp.float32))
-        anchors = st.anchors.at[ids].set(w_t.astype(jnp.float32)[None, :])
+        updates = st.updates.at[ids].set(u32)
+        anchors = st.anchors.at[ids].set(w32[None, :])
         last_round = st.last_round.at[ids].set(t)
 
         # All P fresh Ω rows in one fused Gram-kernel pass (no per-client
         # Python loop; each row only depends on its own previous row, so the
-        # block is exactly the stacked per-row recurrence).
+        # block is exactly the stacked per-row recurrence).  Mesh-bound
+        # servers reduce the same inner products across the D-shards.
         ids_dev = jnp.asarray(ids)
-        rows = relationship.relationship_block(
-            ids_dev,
-            client_updates,
-            w_t,
-            updates,
-            anchors,
-            last_round,
-            t,
-            st.omega[ids_dev],
-        )
+        if self.mesh is not None:
+            rows = relationship.sharded_relationship_block(
+                ids_dev, u32, w32, updates, anchors, last_round, t,
+                st.omega[ids_dev], mesh=self.mesh, axes=self.mesh_axes,
+            )
+        else:
+            rows = relationship.relationship_block(
+                ids_dev, u32, w32, updates, anchors, last_round, t,
+                st.omega[ids_dev],
+            )
         omega = st.omega.at[ids_dev].set(rows)
         heuristic = heuristics.update_heuristic_rows(st.heuristic, omega, ids_dev)
         self.state = dataclasses.replace(
@@ -124,9 +171,22 @@ class FLrceServer:
 
     # -- Alg. 4 lines 20-23: early stopping ---------------------------------
     def check_early_stop(self, selected_updates: jax.Array) -> bool:
-        decision = early_stopping.should_stop(
-            selected_updates, self.psi, is_exploit_round=self._last_exploit
-        )
+        # explore rounds never read the Gram (Alg. 3 only fires on exploit),
+        # so don't dispatch the cross-shard contraction just to drop it
+        if self.mesh is not None and self._last_exploit:
+            from repro.core.distributed import sharded_gram
+
+            gram = sharded_gram(
+                self._shard_cols(selected_updates.astype(jnp.float32)),
+                self.mesh, self.mesh_axes,
+            )
+            decision = early_stopping.should_stop_from_gram(
+                gram, self.psi, is_exploit_round=True
+            )
+        else:
+            decision = early_stopping.should_stop(
+                selected_updates, self.psi, is_exploit_round=self._last_exploit
+            )
         st = self.state
         self.state = dataclasses.replace(
             st,

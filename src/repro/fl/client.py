@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,23 @@ import numpy as np
 from repro.data.loader import epoch_batches
 
 PyTree = Any
+
+# a round's batch randomness: one shared stream (legacy, consumed
+# client-major) or one independent fold-in stream per client
+CohortRngs = Union[np.random.Generator, Sequence[np.random.Generator]]
+
+
+def client_batch_rng(seed: int, t: int, cid: int) -> np.random.Generator:
+    """Placement-independent batch RNG: fold (seed, round, client) into one
+    independent stream.
+
+    A client's shuffle sequence depends only on this triple — never on its
+    position in the cohort, the cohort's composition, or which mesh shard it
+    lands on — so the sequential, batched and sharded engines all draw
+    identical batches per client.
+    """
+    entropy = [int(seed) & 0xFFFFFFFFFFFFFFFF, int(t), int(cid)]
+    return np.random.default_rng(np.random.SeedSequence(entropy))
 
 
 def tree_sub(a: PyTree, b: PyTree) -> PyTree:
@@ -179,22 +196,34 @@ def build_cohort_plan(
     client_data: Sequence[Tuple[np.ndarray, np.ndarray]],
     epochs: Sequence[int],
     batch_size: int,
-    rng: np.random.Generator,
+    rng: CohortRngs,
     *,
     bucket_steps: bool = True,
 ) -> CohortPlan:
     """Stack every selected client's shuffled epoch batches into one schedule.
 
-    Consumes ``rng`` in exactly the order the sequential engine does
-    (client-major, epoch-minor, one ``permutation`` per epoch), so both
-    engines see identical batch sequences for a given round.
+    ``rng`` is either one shared host Generator — consumed exactly in the
+    order the sequential engine does (client-major, epoch-minor, one
+    ``permutation`` per epoch) — or a sequence of per-client Generators (the
+    :func:`client_batch_rng` fold-in streams), which makes a client's batches
+    independent of cohort order and therefore placement-independent: any
+    subset of clients, built in any order or on any shard, draws the same
+    schedules.
     """
     if not client_data:
         raise ValueError("empty cohort")
+    if isinstance(rng, np.random.Generator):
+        rngs: List[np.random.Generator] = [rng] * len(client_data)
+    else:
+        rngs = list(rng)
+        if len(rngs) != len(client_data):
+            raise ValueError(
+                f"got {len(rngs)} per-client rngs, expected {len(client_data)}"
+            )
     feat = client_data[0][0].shape[1:]
     per_client: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     steps_per_client: List[int] = []
-    for (x, y), e in zip(client_data, epochs):
+    for (x, y), e, rng_k in zip(client_data, epochs, rngs):
         n = len(x)
         nb = -(-n // batch_size) if n else 0
         s_k = max(1, int(e)) * nb
@@ -203,7 +232,7 @@ def build_cohort_plan(
         bw = np.zeros((s_k, batch_size), np.float32)
         s = 0
         for _ in range(max(1, int(e))):
-            order = rng.permutation(n)
+            order = rng_k.permutation(n)
             for start in range(0, n, batch_size):
                 ix = order[start : start + batch_size]
                 bx[s, : len(ix)] = x[ix]
@@ -228,6 +257,32 @@ def build_cohort_plan(
         x=px, y=py, sample_w=pw, step_valid=pv,
         epochs=[max(1, int(e)) for e in epochs],
         num_samples=[len(x) for x, _ in client_data],
+    )
+
+
+def pad_plan_clients(plan: CohortPlan, multiple: int) -> CohortPlan:
+    """Pad the client axis to a multiple of ``multiple`` (the mesh data-axis
+    size) with all-invalid clients.
+
+    A padded client has ``step_valid == 0`` everywhere, so every one of its
+    scan steps is an exact no-op: its update row is identically zero and it
+    is sliced off before the round's flat buffer is consumed.
+    """
+    from repro.core.distributed import pad_dim
+
+    p = plan.num_clients
+    p_pad = pad_dim(p, multiple)
+    if p_pad == p:
+        return plan
+
+    def pad(a: np.ndarray) -> np.ndarray:
+        return np.concatenate([a, np.zeros((p_pad - p, *a.shape[1:]), a.dtype)])
+
+    return CohortPlan(
+        x=pad(plan.x), y=pad(plan.y), sample_w=pad(plan.sample_w),
+        step_valid=pad(plan.step_valid),
+        epochs=list(plan.epochs) + [0] * (p_pad - p),
+        num_samples=list(plan.num_samples) + [0] * (p_pad - p),
     )
 
 
@@ -357,6 +412,129 @@ class BatchedCohortTrainer:
         )
         stats = cohort_stats(np.asarray(losses), plan)
         return updates, flat, stats
+
+
+class ShardedCohortTrainer(BatchedCohortTrainer):
+    """BatchedCohortTrainer distributed over a ``(data, model)`` mesh.
+
+    Local training shard_maps the SAME vmap/scan cohort program over the mesh
+    ``data`` axis — each shard trains its slice of the (client-padded) cohort
+    against the replicated global model — and the resulting flat update
+    matrix is resharded in one jitted step so D is split over EVERY mesh axis
+    (zero-padded to the shard count), exactly the layout the sharded Gram
+    reductions (aggregation, ingest, early stopping) consume.  The (P, D)
+    buffer is never replicated and never bounces through the host.
+    """
+
+    def __init__(
+        self,
+        model,
+        learning_rate: float,
+        batch_size: int,
+        mesh,
+        *,
+        data_axis: str = "data",
+    ):
+        super().__init__(model, learning_rate, batch_size)
+        from repro.core.distributed import mesh_axes_size
+
+        if data_axis not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no {data_axis!r} axis")
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.axes = tuple(mesh.axis_names)
+        self.num_shards = mesh_axes_size(mesh, self.axes)
+        self._sharded_train_cache: Dict[Tuple[bool, bool], Any] = {}
+        self._reshard_cache: Dict[Tuple[int, int, int], Any] = {}
+
+    def _sharded_train(self, use_prox: bool, has_mask: bool):
+        key = (use_prox, has_mask)
+        if key not in self._sharded_train_cache:
+            from jax.sharding import PartitionSpec as P
+            from repro.core.distributed import _shard_map
+
+            train = functools.partial(
+                self._make_train(), use_prox=use_prox, has_mask=has_mask
+            )
+            dspec = P(self.data_axis)
+            in_specs = (P(), dspec, dspec, dspec, dspec, dspec, dspec, dspec)
+            out_specs = (dspec, P(self.data_axis, None), dspec)
+            self._sharded_train_cache[key] = jax.jit(
+                _shard_map(train, self.mesh, in_specs, out_specs)
+            )
+        return self._sharded_train_cache[key]
+
+    def _reshard_flat(self, n_real: int, d: int):
+        """One jitted pad+reshard: drop padded clients, zero-pad D to the
+        shard count, lay the matrix out D-sharded over every mesh axis."""
+        from repro.core.distributed import pad_dim
+
+        d_pad = pad_dim(d, self.num_shards)
+        key = (n_real, d, d_pad)
+        if key not in self._reshard_cache:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sharding = NamedSharding(self.mesh, P(None, self.axes))
+
+            row_sharding = NamedSharding(self.mesh, P(self.data_axis, None))
+
+            def reshard(f):
+                # pad under the producer's row sharding, reshard the evenly
+                # shaped matrix (a clean all-to-all), THEN slice the
+                # now-replicated client axis — letting XLA reshard the ragged
+                # unpadded input instead forces a full rematerialization
+                g = jnp.pad(f, ((0, 0), (0, d_pad - d)))
+                g = jax.lax.with_sharding_constraint(g, row_sharding)
+                g = jax.lax.with_sharding_constraint(g, sharding)
+                return g[:n_real]
+
+            self._reshard_cache[key] = jax.jit(reshard, out_shardings=sharding)
+        return self._reshard_cache[key]
+
+    def train_cohort(
+        self,
+        global_params: PyTree,
+        plan: CohortPlan,
+        *,
+        prox_mus: Sequence[float],
+        masks: Sequence[Optional[PyTree]],
+        freeze_fracs: Sequence[float],
+    ) -> Tuple[PyTree, jax.Array, List[Dict[str, float]]]:
+        """Returns (stacked update pytree with a client-padded leading axis,
+        flat (P, D_pad) fp32 update matrix D-sharded over the mesh,
+        per-client stats for the REAL clients)."""
+        n_data = self.mesh.shape[self.data_axis]
+        p_real = plan.num_clients
+        padded = pad_plan_clients(plan, n_data)
+        n_pad = padded.num_clients - p_real
+        mask, has_mask = stack_variant_trees(
+            list(masks) + [None] * n_pad, global_params
+        )
+        freeze = stack_freeze_flags(
+            global_params, list(freeze_fracs) + [0.0] * n_pad
+        )
+        mu = jnp.asarray(np.asarray(list(prox_mus) + [0.0] * n_pad, np.float32))
+        use_prox = bool(np.any(np.asarray(prox_mus) > 0.0))
+        train = self._sharded_train(use_prox, has_mask)
+        updates, flat, losses = train(
+            global_params,
+            jnp.asarray(padded.x),
+            jnp.asarray(padded.y),
+            jnp.asarray(padded.sample_w),
+            jnp.asarray(padded.step_valid),
+            mask if has_mask else {},
+            freeze,
+            mu,
+        )
+        flat = self.shard_updates(flat, p_real)
+        stats = cohort_stats(np.asarray(losses)[:p_real], plan)
+        return updates, flat, stats
+
+    def shard_updates(self, flat: jax.Array, n_real: int) -> jax.Array:
+        """Lay a flat update matrix out in the round-buffer layout: the first
+        ``n_real`` rows, D zero-padded to the shard count, D-sharded over
+        every mesh axis (also used to re-shard host-processed columns)."""
+        return self._reshard_flat(n_real, flat.shape[1])(flat)
 
 
 def cohort_stats(losses: np.ndarray, plan: CohortPlan) -> List[Dict[str, float]]:

@@ -44,6 +44,11 @@ class FLrce(Strategy):
     def select(self, t: int) -> np.ndarray:
         return self.server.select()
 
+    def bind_mesh(self, mesh, axes) -> None:
+        # the V/A maps are the strategy's only O(D) state; sharding them makes
+        # ingest + ES consume the engine's D-sharded round buffers directly
+        self.server.bind_mesh(mesh, axes)
+
     @property
     def last_round_was_exploit(self) -> bool:
         return self.server.last_round_was_exploit

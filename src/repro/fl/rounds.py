@@ -4,18 +4,26 @@ Runs T rounds of: select → broadcast → local train → upload → aggregate 
 strategy bookkeeping (RM + ES for FLrce) → evaluate, with exact resource
 accounting through a :class:`ResourceLedger`.
 
-Two interchangeable execution engines (see DESIGN.md §Engine):
+Three interchangeable execution engines (see DESIGN.md §Engine):
 
 * ``engine="sequential"`` — the reference path: one jitted SGD step per
   client per batch, driven from Python.  O(P × steps) device dispatches.
-* ``engine="batched"`` — the production path (default): the whole cohort's
-  local training is one jitted vmap/scan program, and the round's flat
-  (P, D) update matrix is produced on device and shared — without bouncing
-  through NumPy — between aggregation (Eq. 4), relationship modeling
-  (Eq. 5/6 via the Gram kernels), and early stopping (Alg. 3).
+* ``engine="batched"`` — the single-device production path (default): the
+  whole cohort's local training is one jitted vmap/scan program, and the
+  round's flat (P, D) update matrix is produced on device and shared —
+  without bouncing through NumPy — between aggregation (Eq. 4),
+  relationship modeling (Eq. 5/6 via the Gram kernels), and early stopping
+  (Alg. 3).
+* ``engine="sharded"`` — the batched program shard_mapped over a
+  ``(data, model)`` mesh: cohort training splits over the ``data`` axis and
+  the flat (P, D) buffer stays D-sharded over every mesh axis through
+  aggregation, ingest and early stopping (the sharded Gram reductions in
+  ``core.distributed``) — no replicated (P, D) materialization.
 
-Both engines consume the host RNG identically and run the same math, so they
-produce matching results within fp32 tolerance (tests/test_batched_engine.py).
+Every engine draws each client's batches from the same placement-independent
+fold-in stream (``client_batch_rng``) and runs the same math, so all three
+produce matching results within fp32 tolerance (tests/test_batched_engine.py,
+tests/test_sharded_engine.py).
 """
 from __future__ import annotations
 
@@ -27,17 +35,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import flatten_pytree
+from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
 from repro.data.synthetic import FederatedDataset
 from repro.fl.aggregation import aggregation_weights
-from repro.fl.client import BatchedCohortTrainer, ClientTrainer, build_cohort_plan
+from repro.fl.client import (
+    BatchedCohortTrainer,
+    ClientTrainer,
+    ShardedCohortTrainer,
+    build_cohort_plan,
+    client_batch_rng,
+)
 from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
 from repro.fl.strategy import LocalConfig, Strategy
 from repro.models.cnn import param_count
 
 PyTree = Any
 
-ENGINES = ("sequential", "batched")
+ENGINES = ("sequential", "batched", "sharded")
 
 
 @dataclasses.dataclass
@@ -107,18 +121,18 @@ def _sequential_round(
     dataset: FederatedDataset,
     ids: np.ndarray,
     cfgs: Sequence[LocalConfig],
-    rng: np.random.Generator,
+    rngs: Sequence[np.random.Generator],
 ) -> Tuple[List[PyTree], List[Dict[str, float]]]:
     """Reference path: per-client Python loop over jitted single steps."""
     updates, stats = [], []
-    for cid, cfg in zip(ids, cfgs):
+    for cid, cfg, rng_k in zip(ids, cfgs, rngs):
         x_k, y_k = dataset.client_data(int(cid))
         update, st = trainer.local_update(
             params,
             x_k,
             y_k,
             cfg.epochs,
-            rng,
+            rng_k,
             prox_mu=cfg.prox_mu,
             mask=cfg.mask,
             freeze_frac=cfg.freeze_frac,
@@ -142,17 +156,36 @@ def run_federated(
     init_params: Optional[PyTree] = None,
     verbose: bool = False,
     engine: str = "batched",
+    mesh=None,
 ) -> FLResult:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
-    rng = np.random.default_rng(seed)
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
     trainer: Any
+    shard_vec = None
     if engine == "sequential":
         trainer = ClientTrainer(model, learning_rate, batch_size)
-    else:
+    elif engine == "batched":
         trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
+    else:
+        if mesh is None:
+            from repro.launch.mesh import make_engine_mesh
+
+            mesh = make_engine_mesh()
+        trainer = ShardedCohortTrainer(model, learning_rate, batch_size, mesh)
+        # strategies with O(D) state (FLrce's V/A maps) move it onto the mesh
+        strategy.bind_mesh(mesh, trainer.axes)
+        # the round's (D,) broadcast snapshot: zero-padded to the shard count
+        # and laid out D-sharded, once per round, shared by aggregation and
+        # post_round exactly like the dense engines share w_before
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        d_pad = pad_dim(n_params, trainer.num_shards)
+        shard_vec = jax.jit(
+            lambda v: jnp.pad(v, (0, d_pad - n_params)),
+            out_shardings=NamedSharding(mesh, PartitionSpec(trainer.axes)),
+        )
     ledger = ResourceLedger(device=device)
     eval_fn = jax.jit(model.accuracy)
     eval_x, eval_y = jnp.asarray(dataset.eval_x), jnp.asarray(dataset.eval_y)
@@ -168,9 +201,13 @@ def run_federated(
         # aggregation, relationship modeling, and early stopping.
         w_before, unflatten = flatten_pytree(params)
         cfgs = [strategy.client_config(t, int(cid), params) for cid in ids]
+        # placement-independent batch randomness: one fold-in stream per
+        # (seed, round, client) — identical across all three engines and
+        # across any client→shard placement
+        rngs = [client_batch_rng(seed, t, int(cid)) for cid in ids]
 
         if engine == "sequential":
-            updates, stats = _sequential_round(trainer, params, dataset, ids, cfgs, rng)
+            updates, stats = _sequential_round(trainer, params, dataset, ids, cfgs, rngs)
             processed_cols, upload_fracs = [], []
             for cid, cfg, update in zip(ids, cfgs, updates):
                 processed, proc_frac = strategy.process_update(int(cid), update)
@@ -182,7 +219,7 @@ def run_federated(
                 [dataset.client_data(int(cid)) for cid in ids],
                 [cfg.epochs for cfg in cfgs],
                 batch_size,
-                rng,
+                rngs,
             )
             stacked, update_matrix, stats = trainer.train_cohort(
                 params,
@@ -200,6 +237,9 @@ def run_federated(
                     processed_cols.append(_flatten_update(processed))
                     upload_fracs.append(min(proc_frac, cfg.upload_fraction))
                 update_matrix = jnp.stack(processed_cols)
+                if engine == "sharded":
+                    # host-processed columns go back to the mesh layout
+                    update_matrix = trainer.shard_updates(update_matrix, len(ids))
             else:
                 upload_fracs = [cfg.upload_fraction for cfg in cfgs]
 
@@ -214,7 +254,15 @@ def run_federated(
 
         # --- Eq. 4 aggregation from the shared flat buffer ------------------
         weights = jnp.asarray(aggregation_weights(sizes[ids]), jnp.float32)
-        params = unflatten(w_before + weights @ update_matrix)
+        if engine == "sharded":
+            # w and U stay D-sharded through aggregation AND post_round;
+            # unflatten never reads the zero-padded tail
+            w_before = shard_vec(w_before)
+            params = unflatten(
+                sharded_aggregate(w_before, update_matrix, weights, mesh, trainer.axes)
+            )
+        else:
+            params = unflatten(w_before + weights @ update_matrix)
 
         # post_round receives DEVICE arrays: no host bounce between
         # aggregation, relationship modeling, and early stopping.

@@ -59,6 +59,15 @@ class Strategy:
         compression strategy cannot silently skip its own processing."""
         return type(self).process_update is not Strategy.process_update
 
+    # -- execution placement --------------------------------------------------
+    def bind_mesh(self, mesh, axes) -> None:
+        """Called once by the sharded engine before the first round.
+
+        Strategies that carry O(D) state (FLrce's V/A maps) move it onto the
+        mesh here so ``post_round`` can consume the engine's D-sharded
+        buffers without replicating them.  Default: nothing to move.
+        """
+
     # -- per-round bookkeeping + stop ----------------------------------------
     def post_round(
         self,
@@ -75,6 +84,9 @@ class Strategy:
         Implementations must NOT assume NumPy inputs: the engine keeps these
         on device so relationship modeling and early stopping run without a
         host round-trip.  ``np.asarray`` works if host values are needed.
+        Under ``engine="sharded"`` both buffers arrive D-sharded over the
+        mesh and zero-padded to the shard count (padded columns are exact
+        no-ops in every inner product and are never read back).
         """
         return False
 

@@ -21,3 +21,29 @@ def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_engine_mesh(data: int | None = None, model: int | None = None):
+    """Best-effort ``(data, model)`` mesh over whatever devices exist.
+
+    The sharded round engine's default: with both factors unset, the device
+    count is split into its most square factorization (8 host devices →
+    (2, 4); 1 device → (1, 1), which still exercises every sharded code
+    path).  Force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = jax.device_count()
+    if data is None and model is None:
+        data = 1
+        for f in range(int(n ** 0.5), 0, -1):
+            if n % f == 0:
+                data = f
+                break
+        model = n // data
+    elif data is None:
+        data = n // model
+    elif model is None:
+        model = n // data
+    if data * model > n:
+        raise ValueError(f"mesh ({data}, {model}) needs {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,133 @@
+"""build_cohort_plan / pad_plan_clients edge cases.
+
+The padded schedule is the load-bearing abstraction under both the batched
+and the sharded engine: ragged epochs, partial batches, degenerate cohorts
+and padded clients must all be exact no-ops, not approximations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import flatten_pytree
+from repro.fl.client import (
+    BatchedCohortTrainer,
+    ClientTrainer,
+    build_cohort_plan,
+    client_batch_rng,
+    pad_plan_clients,
+)
+from repro.models.cnn import MLPClassifier
+
+
+def _clients(rng, sizes, feat=6, classes=3):
+    return [
+        (rng.normal(size=(n, feat)).astype(np.float32),
+         rng.integers(0, classes, size=n).astype(np.int32))
+        for n in sizes
+    ]
+
+
+@pytest.fixture(scope="module")
+def model():
+    return MLPClassifier(feature_dim=6, num_classes=3, hidden=(8,))
+
+
+def test_ragged_epochs_step_counts():
+    rng = np.random.default_rng(0)
+    data = _clients(rng, [20, 7, 33])
+    epochs = [1, 4, 2]
+    plan = build_cohort_plan(data, epochs, 8, np.random.default_rng(1))
+    # client k trains epochs[k] * ceil(n_k / B) real steps, zero-padded after
+    want_steps = [1 * 3, 4 * 1, 2 * 5]
+    got_steps = plan.step_valid.sum(axis=1).astype(int).tolist()
+    assert got_steps == want_steps
+    assert plan.num_steps >= max(want_steps)
+    # real sample mass: every sample appears once per epoch
+    want_mass = [20 * 1, 7 * 4, 33 * 2]
+    got_mass = plan.sample_w.sum(axis=(1, 2)).astype(int).tolist()
+    assert got_mass == want_mass
+
+
+def test_batch_size_larger_than_dataset():
+    rng = np.random.default_rng(2)
+    data = _clients(rng, [5])
+    plan = build_cohort_plan(data, [3], 16, np.random.default_rng(3))
+    # one (partial) batch per epoch; the 11 pad slots carry zero weight
+    assert int(plan.step_valid.sum()) == 3
+    assert int(plan.sample_w.sum()) == 15
+    assert plan.sample_w[0, 0].sum() == 5
+    np.testing.assert_array_equal(plan.x[0, 0, 5:], 0.0)
+
+
+def test_single_client_cohort_matches_sequential(model):
+    rng = np.random.default_rng(4)
+    data = _clients(rng, [11])
+    params = model.init(jax.random.PRNGKey(0))
+    seq = ClientTrainer(model, 0.1, 4)
+    u_seq, st_seq = seq.local_update(
+        params, data[0][0], data[0][1], 2, client_batch_rng(5, 0, 0)
+    )
+    bat = BatchedCohortTrainer(model, 0.1, 4)
+    plan = build_cohort_plan(data, [2], 4, [client_batch_rng(5, 0, 0)])
+    _, flat, st_bat = bat.train_cohort(
+        params, plan, prox_mus=[0.0], masks=[None], freeze_fracs=[0.0]
+    )
+    np.testing.assert_allclose(
+        np.asarray(flat[0]), np.asarray(flatten_pytree(u_seq)[0]),
+        atol=1e-5, rtol=1e-3,
+    )
+    assert st_seq["steps"] == st_bat[0]["steps"]
+
+
+def test_step_bucketing_padding_contributes_zero(model):
+    """The power-of-two step bucket only appends invalid steps; the trained
+    update must be bit-comparable with the unbucketed schedule."""
+    rng = np.random.default_rng(6)
+    data = _clients(rng, [13, 4])
+    params = model.init(jax.random.PRNGKey(1))
+    bat = BatchedCohortTrainer(model, 0.1, 4)
+    kw = dict(prox_mus=[0.0, 0.01], masks=[None, None], freeze_fracs=[0.0, 0.0])
+    plans = [
+        build_cohort_plan(
+            # 3 epochs × ceil(13/4) = 12 steps → bucketed up to 16
+            data, [3, 1], 4, [client_batch_rng(9, 0, c) for c in (0, 1)],
+            bucket_steps=b,
+        )
+        for b in (True, False)
+    ]
+    assert plans[0].num_steps > plans[1].num_steps    # bucketing really padded
+    flats = [
+        np.asarray(bat.train_cohort(params, p, **kw)[1]) for p in plans
+    ]
+    np.testing.assert_allclose(flats[0], flats[1], atol=1e-6)
+
+
+def test_pad_plan_clients_rows_are_exact_noops(model):
+    rng = np.random.default_rng(7)
+    data = _clients(rng, [9, 6, 10])
+    plan = build_cohort_plan(
+        data, [1, 2, 1], 4, [client_batch_rng(3, 0, c) for c in range(3)]
+    )
+    padded = pad_plan_clients(plan, 4)
+    assert padded.num_clients == 4
+    np.testing.assert_array_equal(padded.step_valid[3], 0.0)
+    np.testing.assert_array_equal(padded.x[:3], plan.x)
+    # a padded client's update row is identically zero after training
+    params = model.init(jax.random.PRNGKey(2))
+    bat = BatchedCohortTrainer(model, 0.1, 4)
+    _, flat, _ = bat.train_cohort(
+        params, padded,
+        prox_mus=[0.0] * 4, masks=[None] * 4, freeze_fracs=[0.0] * 4,
+    )
+    np.testing.assert_array_equal(np.asarray(flat[3]), 0.0)
+    assert pad_plan_clients(plan, 3) is plan          # already a multiple
+
+
+def test_cohort_plan_input_validation():
+    with pytest.raises(ValueError, match="empty cohort"):
+        build_cohort_plan([], [], 8, np.random.default_rng(0))
+    rng = np.random.default_rng(8)
+    data = _clients(rng, [4, 4])
+    with pytest.raises(ValueError, match="per-client rngs"):
+        build_cohort_plan(data, [1, 1], 8, [np.random.default_rng(0)])

@@ -1,0 +1,369 @@
+"""Sharded-engine equivalence suite (DESIGN.md §Engine).
+
+``engine="sharded"`` must reproduce the sequential and batched engines within
+fp32 tolerance — across prox/mask/freeze variants, ragged cohorts, cohort
+sizes not divisible by the mesh ``data`` axis, and flat dims not divisible by
+the shard count — while keeping the round's flat (P, D) buffer D-sharded
+(never replicated) through aggregation, ingest and early stopping.
+
+Multi-device tests force 8 virtual CPU devices via the SNIPPETS idiom:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_sharded_engine.py
+
+They skip cleanly when fewer devices are available (CI runs a matrix leg with
+the flag set); a slow subprocess fallback exercises the 8-device path even
+without it, and the (1, 1)-mesh tests run everywhere.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import (
+    pad_dim,
+    sharded_aggregate,
+    sharded_cross_gram,
+    sharded_gram,
+)
+from repro.core.server import FLrceServer
+from repro.data import make_federated_classification
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import Dropout, FedAvg, Fedcom, Fedprox, TimelyFL
+from repro.fl.client import (
+    BatchedCohortTrainer,
+    ShardedCohortTrainer,
+    build_cohort_plan,
+    client_batch_rng,
+)
+from repro.launch.mesh import make_debug_mesh, make_engine_mesh
+from repro.models.cnn import MLPClassifier, param_count
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+MULTI = jax.device_count() >= 8
+needs8 = pytest.mark.skipif(
+    not MULTI,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return make_debug_mesh(2, 4)
+
+
+@pytest.fixture(scope="module")
+def tiny_fed():
+    # alpha=0.2 ⇒ ragged client datasets; P=3 per round is not divisible by
+    # the mesh data axis (2), so the client-padding path is always exercised
+    ds = make_federated_classification(
+        num_clients=8, alpha=0.2, num_samples=800, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    return ds, MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+
+
+def _run(model, ds, make_strategy, engine, **kw):
+    return run_federated(model, ds, make_strategy(), engine=engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# sequential ≡ batched ≡ sharded through run_federated (8 devices)
+# ---------------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("cls,kw", [
+    (FedAvg, {}),
+    (Fedprox, {"mu": 0.01}),
+    (Dropout, {"keep_rate": 0.6}),
+    (TimelyFL, {}),
+])
+def test_three_engines_match_per_variant(tiny_fed, mesh8, cls, kw):
+    ds, model = tiny_fed
+    runs = {
+        eng: _run(
+            model, ds, lambda: cls(8, 3, 2, seed=0, **kw), eng,
+            max_rounds=3, learning_rate=0.1, batch_size=16, seed=0,
+            **({"mesh": mesh8} if eng == "sharded" else {}),
+        )
+        for eng in ("sequential", "batched", "sharded")
+    }
+    seq, bat, sha = runs["sequential"], runs["batched"], runs["sharded"]
+    np.testing.assert_allclose(seq.accuracy_curve(), sha.accuracy_curve(), atol=2e-3)
+    np.testing.assert_allclose(bat.accuracy_curve(), sha.accuracy_curve(), atol=2e-3)
+    for a, b in zip(bat.records, sha.records):
+        assert a.selected == b.selected
+        assert a.mean_client_loss == pytest.approx(b.mean_client_loss, abs=1e-4)
+    # the ledger is pure host bookkeeping over identical selections/configs
+    assert bat.ledger.energy_j == pytest.approx(sha.ledger.energy_j, rel=1e-12)
+    assert bat.ledger.total_bytes == pytest.approx(sha.ledger.total_bytes, rel=1e-12)
+
+
+@needs8
+def test_compression_strategy_through_sharded_engine(tiny_fed, mesh8):
+    """processes_updates strategies bounce per-client pytrees through the
+    host; the re-sharded processed matrix must still match the batched path."""
+    ds, model = tiny_fed
+    bat = _run(model, ds, lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
+               "batched", max_rounds=2, learning_rate=0.1, batch_size=16, seed=0)
+    sha = _run(model, ds, lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
+               "sharded", max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+               mesh=mesh8)
+    np.testing.assert_allclose(bat.accuracy_curve(), sha.accuracy_curve(), atol=2e-3)
+    assert bat.ledger.bytes_up == pytest.approx(sha.ledger.bytes_up, rel=1e-12)
+
+
+@needs8
+def test_flrce_full_loop_batched_vs_sharded(tiny_fed, mesh8):
+    """FLrce exercises the whole sharded round: shard_mapped training, sharded
+    aggregation, sharded ingest (V/A maps on the mesh), sharded ES."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    strat_s = FLrce(8, 3, 2, dim=dim, es_threshold=2.0, seed=0)
+    bat = _run(model, ds, lambda: FLrce(8, 3, 2, dim=dim, es_threshold=2.0, seed=0),
+               "batched", max_rounds=5, learning_rate=0.1, batch_size=16, seed=0)
+    sha = run_federated(model, ds, strat_s, engine="sharded", mesh=mesh8,
+                        max_rounds=5, learning_rate=0.1, batch_size=16, seed=0)
+    assert [r.selected for r in bat.records] == [r.selected for r in sha.records]
+    np.testing.assert_allclose(bat.accuracy_curve(), sha.accuracy_curve(), atol=2e-3)
+    assert bat.rounds_run == sha.rounds_run
+    assert bat.stopped_early == sha.stopped_early
+    # the strategy's V/A maps really moved to the mesh: every device holds a
+    # D-shard, none holds the full padded dim
+    server = strat_s.server
+    assert server.mesh is mesh8
+    shards = server.state.updates.addressable_shards
+    assert len({s.device for s in shards}) == 8
+    assert all(s.data.shape[1] < server.dim_pad for s in shards)
+
+
+@needs8
+def test_sharded_trainer_matches_batched_update_matrix(tiny_fed, mesh8):
+    """Trainer-level contract: same flat update matrix (modulo zero padding),
+    laid out D-sharded over every mesh axis."""
+    ds, model = tiny_fed
+    params = model.init(jax.random.PRNGKey(3))
+    dim = param_count(params)
+    ids = [0, 1, 2, 3, 4]          # 5 clients: not divisible by data=2
+    epochs = [2, 1, 3, 1, 2]       # ragged step counts
+    prox_mus = [0.0, 0.05, 0.0, 0.0, 0.03]
+    freeze_fracs = [0.0, 0.0, 0.4, 0.0, 0.0]
+    masks = [None] * 5
+    mask_rng = np.random.default_rng(7)
+    masks[3] = jax.tree_util.tree_map(
+        lambda l: jnp.asarray(mask_rng.random(l.shape) < 0.5, l.dtype)
+        if l.ndim >= 2 else jnp.ones_like(l),
+        params,
+    )
+    kw = dict(prox_mus=prox_mus, masks=masks, freeze_fracs=freeze_fracs)
+
+    rngs = [client_batch_rng(0, 0, c) for c in ids]
+    data = [ds.client_data(c) for c in ids]
+    plan_b = build_cohort_plan(data, epochs, 16, rngs)
+    plan_s = build_cohort_plan(data, epochs, 16, [client_batch_rng(0, 0, c) for c in ids])
+
+    bat = BatchedCohortTrainer(model, 0.05, 16)
+    _, flat_b, stats_b = bat.train_cohort(params, plan_b, **kw)
+    sha = ShardedCohortTrainer(model, 0.05, 16, mesh8)
+    _, flat_s, stats_s = sha.train_cohort(params, plan_s, **kw)
+
+    d_pad = pad_dim(dim, 8)
+    assert flat_s.shape == (5, d_pad)
+    got = np.asarray(flat_s)
+    np.testing.assert_allclose(got[:, dim:], 0.0)              # zero-padded tail
+    scale = float(np.abs(np.asarray(flat_b)).max())
+    np.testing.assert_allclose(
+        got[:, :dim], np.asarray(flat_b), atol=max(1e-5, 1e-4 * scale), rtol=1e-3
+    )
+    for a, b in zip(stats_b, stats_s):
+        assert a["steps"] == b["steps"]
+        assert a["samples_processed"] == b["samples_processed"]
+        assert a["mean_loss"] == pytest.approx(b["mean_loss"], abs=1e-4)
+    # layout: D split over every mesh axis, every device holds d_pad/8 columns
+    shards = flat_s.addressable_shards
+    assert len({s.device for s in shards}) == 8
+    assert all(s.data.shape == (5, d_pad // 8) for s in shards)
+
+
+# ---------------------------------------------------------------------------
+# golden tests: sharded reductions vs dense NumPy (8 devices)
+# ---------------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("d", [96, 101])   # 101 is not divisible by 8 shards
+def test_sharded_reductions_match_numpy_golden(mesh8, d):
+    axes = ("data", "model")
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(5, d)).astype(np.float32)
+    v = rng.normal(size=(3, d)).astype(np.float32)
+    w = rng.normal(size=(d,)).astype(np.float32)
+    weights = rng.dirichlet(np.ones(5)).astype(np.float32)
+
+    got = np.asarray(sharded_gram(jnp.asarray(u), mesh8, axes))
+    np.testing.assert_allclose(got, u @ u.T, rtol=2e-4, atol=1e-3)
+
+    got = np.asarray(sharded_cross_gram(jnp.asarray(u), jnp.asarray(v), mesh8, axes))
+    np.testing.assert_allclose(got, u @ v.T, rtol=2e-4, atol=1e-3)
+
+    got = np.asarray(sharded_aggregate(
+        jnp.asarray(w), jnp.asarray(u), jnp.asarray(weights), mesh8, axes
+    ))
+    assert got.shape == (d,)               # padded tail sliced back off
+    np.testing.assert_allclose(got, w + weights @ u, rtol=2e-4, atol=1e-3)
+
+
+@needs8
+def test_mesh_bound_server_matches_host_server(mesh8):
+    """FLrceServer.bind_mesh: sharded ingest + ES reproduce the host maps."""
+    m, d, p = 6, 101, 3                    # d not divisible by the 8 shards
+    host = FLrceServer(m, d, p, es_threshold=1.5, explore_decay=0.5, seed=0)
+    dist = FLrceServer(m, d, p, es_threshold=1.5, explore_decay=0.5, seed=0)
+    dist.bind_mesh(mesh8, ("data", "model"))
+    rng = np.random.default_rng(1)
+    w = np.zeros(d, np.float32)
+    for t in range(4):
+        ids = host.select()
+        dist.select()                      # keep the PRNG streams aligned
+        ups = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+        host.ingest(jnp.asarray(w), ids, ups)
+        dist.ingest(jnp.asarray(w), ids, ups)
+        s_h = host.check_early_stop(ups)
+        s_d = dist.check_early_stop(ups)
+        assert bool(s_h) == bool(s_d)
+        assert host.state.last_conflicts == pytest.approx(
+            dist.state.last_conflicts, abs=1e-5
+        )
+        host.advance_round()
+        dist.advance_round()
+        w = w + 0.1 * rng.normal(size=d).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(host.state.omega), np.asarray(dist.state.omega),
+        rtol=2e-3, atol=2e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(host.state.heuristic), np.asarray(dist.state.heuristic),
+        rtol=2e-3, atol=5e-3,
+    )
+    # the distributed maps are padded + sharded, the host maps are not
+    assert dist.state.updates.shape == (m, dist.dim_pad)
+    assert host.state.updates.shape == (m, d)
+
+
+# ---------------------------------------------------------------------------
+# run anywhere: degenerate mesh, RNG placement-independence, eval_every
+# ---------------------------------------------------------------------------
+def test_sharded_engine_default_mesh_matches_batched(tiny_fed):
+    """engine="sharded" with the auto mesh ((1,1) on one device) must match
+    batched everywhere — the sharded code paths never need >1 device to be
+    correct, only to be fast."""
+    ds, model = tiny_fed
+    bat = _run(model, ds, lambda: FedAvg(8, 3, 2, seed=0), "batched",
+               max_rounds=2, learning_rate=0.1, batch_size=16, seed=0)
+    sha = _run(model, ds, lambda: FedAvg(8, 3, 2, seed=0), "sharded",
+               max_rounds=2, learning_rate=0.1, batch_size=16, seed=0)
+    np.testing.assert_allclose(bat.accuracy_curve(), sha.accuracy_curve(), atol=2e-3)
+    for a, b in zip(bat.records, sha.records):
+        assert a.selected == b.selected
+
+
+def test_fold_in_rng_is_placement_independent(tiny_fed):
+    """A client's batch schedule depends only on (seed, round, client) — not
+    on cohort order, composition, or which shard it lands on."""
+    ds, _ = tiny_fed
+    full_ids = [0, 1, 2, 3]
+    sub_ids = [2, 0]                       # different order AND subset
+    plan_full = build_cohort_plan(
+        [ds.client_data(c) for c in full_ids], [2, 1, 2, 1], 16,
+        [client_batch_rng(7, 3, c) for c in full_ids],
+    )
+    plan_sub = build_cohort_plan(
+        [ds.client_data(c) for c in sub_ids], [2, 2], 16,
+        [client_batch_rng(7, 3, c) for c in sub_ids],
+    )
+    for pos_sub, cid in enumerate(sub_ids):
+        pos_full = full_ids.index(cid)
+        n_steps = int(plan_sub.step_valid[pos_sub].sum())
+        np.testing.assert_array_equal(
+            plan_sub.x[pos_sub, :n_steps], plan_full.x[pos_full, :n_steps]
+        )
+        np.testing.assert_array_equal(
+            plan_sub.y[pos_sub, :n_steps], plan_full.y[pos_full, :n_steps]
+        )
+    # and a different round draws different batches
+    other = client_batch_rng(7, 4, 2).permutation(10)
+    assert not np.array_equal(other, client_batch_rng(7, 3, 2).permutation(10))
+
+
+ENGINES_HERE = ["sequential", "batched"] + (["sharded"] if MULTI else [])
+
+
+@pytest.mark.parametrize("engine", ENGINES_HERE)
+def test_eval_every_regression_all_engines(tiny_fed, engine):
+    """PR-1 regression, now a per-engine contract: the terminal round is
+    always freshly evaluated and ``evaluated`` is False exactly on the
+    skipped rounds."""
+    ds, model = tiny_fed
+    res = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0), engine=engine,
+        max_rounds=5, learning_rate=0.1, batch_size=16, seed=0, eval_every=3,
+    )
+    flags = [r.evaluated for r in res.records]
+    assert flags == [True, False, False, True, True]   # t=0, t=3, terminal t=4
+    for prev, rec in zip(res.records, res.records[1:]):
+        if not rec.evaluated:
+            assert rec.accuracy == prev.accuracy       # carried, not measured
+    assert res.records[-1].evaluated
+    assert res.final_accuracy == res.records[-1].accuracy
+
+
+# ---------------------------------------------------------------------------
+# subprocess fallback: the 8-device path runs even without XLA_FLAGS set
+# ---------------------------------------------------------------------------
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, numpy as np
+from repro.data import make_federated_classification
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import FedAvg
+from repro.launch.mesh import make_debug_mesh
+from repro.models.cnn import MLPClassifier, param_count
+
+mesh = make_debug_mesh(2, 4)
+ds = make_federated_classification(num_clients=8, alpha=0.2, num_samples=400,
+                                   num_eval=80, feature_dim=8, num_classes=3, seed=2)
+model = MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+dim = param_count(model.init(jax.random.PRNGKey(0)))
+
+for mk in (lambda: FedAvg(8, 3, 2, seed=0),
+           lambda: FLrce(8, 3, 2, dim=dim, es_threshold=2.0, seed=0)):
+    runs = {}
+    for eng in ("sequential", "batched", "sharded"):
+        kw = {"mesh": mesh} if eng == "sharded" else {}
+        runs[eng] = run_federated(model, ds, mk(), engine=eng, max_rounds=3,
+                                  learning_rate=0.1, batch_size=16, seed=0, **kw)
+    np.testing.assert_allclose(runs["sequential"].accuracy_curve(),
+                               runs["sharded"].accuracy_curve(), atol=2e-3)
+    np.testing.assert_allclose(runs["batched"].accuracy_curve(),
+                               runs["sharded"].accuracy_curve(), atol=2e-3)
+    assert [r.selected for r in runs["batched"].records] == \
+           [r.selected for r in runs["sharded"].records]
+print(json.dumps({"ok": True}))
+"""
+
+
+@pytest.mark.slow
+def test_three_engine_equivalence_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=540,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]
