@@ -2,6 +2,7 @@
 from repro.core.early_stopping import (
     ESDecision,
     conflict_degree,
+    conflict_pairs,
     should_stop,
     should_stop_from_gram,
 )
@@ -16,12 +17,18 @@ from repro.core.relationship import (
     sharded_relationship_block,
     sync_relationship,
 )
-from repro.core.selection import explore_probability, select_clients, top_p_by_heuristic
+from repro.core.selection import (
+    explore_probability,
+    select_clients,
+    select_clients_device,
+    top_p_by_heuristic,
+)
 from repro.core.server import FLrceServer, FLrceState, init_state
 
 __all__ = [
     "ESDecision",
     "conflict_degree",
+    "conflict_pairs",
     "should_stop",
     "should_stop_from_gram",
     "heuristic_from_omega",
@@ -36,6 +43,7 @@ __all__ = [
     "sync_relationship",
     "explore_probability",
     "select_clients",
+    "select_clients_device",
     "top_p_by_heuristic",
     "FLrceServer",
     "FLrceState",

@@ -78,12 +78,22 @@ def cossim_from_gram(gram: jax.Array) -> jax.Array:
     return gram / (norms[:, None] * norms[None, :])
 
 
-def conflict_degree_from_gram(gram: jax.Array) -> jax.Array:
-    """Algorithm 3's average conflicting peers per client, from U Uᵀ."""
+def conflict_pairs_from_gram(gram: jax.Array) -> jax.Array:
+    """Algorithm 3's ordered conflicting-pair count from U Uᵀ.
+
+    Integer-valued fp32 scalar (exact up to 2²⁴ pairs); the callers derive
+    the per-client average as ``pairs / p`` instead of round-tripping it
+    through a lossy normalize/denormalize.
+    """
     p = gram.shape[0]
     cos = cossim_from_gram(gram)
     mask = 1.0 - jnp.eye(p, dtype=cos.dtype)
-    return jnp.sum((cos < 0.0).astype(jnp.float32) * mask) / p
+    return jnp.sum((cos < 0.0).astype(jnp.float32) * mask)
+
+
+def conflict_degree_from_gram(gram: jax.Array) -> jax.Array:
+    """Algorithm 3's average conflicting peers per client, from U Uᵀ."""
+    return conflict_pairs_from_gram(gram) / gram.shape[0]
 
 
 def async_relationship_from_dots(

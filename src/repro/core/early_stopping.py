@@ -4,6 +4,11 @@ On exploit rounds the server counts *ordered* conflicting pairs — Algorithm 3
 double-counts each unordered pair via its nested loops — among the selected
 clients' fresh updates, normalizes by P, and stops when the average number of
 conflicting peers per selected client reaches the threshold ψ.
+
+The pair count is carried as the primitive quantity: ``conflict_pairs`` is
+the integer the nested loops would produce, and ``conflicts`` is derived as
+``pairs / p`` — never re-rounded through a lossy multiply (the old
+``round(avg * p)`` could drift by ±1 for large P).
 """
 from __future__ import annotations
 
@@ -18,13 +23,14 @@ _EPS = 1e-12
 class ESDecision(NamedTuple):
     stop: bool
     conflicts: float          # average conflicting peers per selected client
-    conflict_pairs: int       # ordered conflicting pairs
+    conflict_pairs: int       # ordered conflicting pairs (== conflicts * p)
 
 
-def conflict_degree(updates: jax.Array) -> jax.Array:
-    """Average number of conflicting peers per client for (P, D) updates.
+def conflict_pairs(updates: jax.Array) -> jax.Array:
+    """Ordered conflicting-pair count for (P, D) updates (Alg. 3's loops).
 
-    conflicts = (1/P) * |{(k, j) : k != j, cossim(u_k, u_j) < 0}|
+    ``|{(k, j) : k != j, cossim(u_k, u_j) < 0}|`` — an integer-valued fp32
+    scalar (exact up to 2²⁴ pairs); jit/scan-compatible.
     """
     u = updates.astype(jnp.float32)
     norms = jnp.maximum(jnp.linalg.norm(u, axis=1, keepdims=True), _EPS)
@@ -33,7 +39,15 @@ def conflict_degree(updates: jax.Array) -> jax.Array:
     p = updates.shape[0]
     mask = 1.0 - jnp.eye(p, dtype=gram.dtype)
     neg = (gram < 0.0).astype(jnp.float32) * mask
-    return jnp.sum(neg) / p
+    return jnp.sum(neg)
+
+
+def conflict_degree(updates: jax.Array) -> jax.Array:
+    """Average number of conflicting peers per client for (P, D) updates.
+
+    conflicts = (1/P) * |{(k, j) : k != j, cossim(u_k, u_j) < 0}|
+    """
+    return conflict_pairs(updates) / updates.shape[0]
 
 
 def should_stop(
@@ -45,7 +59,7 @@ def should_stop(
     """Algorithm 3.  ``updates``: (P, D) fresh updates of the selected clients."""
     if not is_exploit_round:
         return ESDecision(stop=False, conflicts=0.0, conflict_pairs=0)
-    return _decide(conflict_degree(updates), updates.shape[0], psi)
+    return decide_from_pairs(conflict_pairs(updates), updates.shape[0], psi)
 
 
 def should_stop_from_gram(
@@ -62,11 +76,17 @@ def should_stop_from_gram(
     """
     if not is_exploit_round:
         return ESDecision(stop=False, conflicts=0.0, conflict_pairs=0)
-    from repro.core.distributed import conflict_degree_from_gram
+    from repro.core.distributed import conflict_pairs_from_gram
 
-    return _decide(conflict_degree_from_gram(gram), gram.shape[0], psi)
+    return decide_from_pairs(conflict_pairs_from_gram(gram), gram.shape[0], psi)
 
 
-def _decide(avg: jax.Array, p: int, psi: float) -> ESDecision:
-    pairs = int(round(float(avg) * p))
-    return ESDecision(stop=bool(avg >= psi), conflicts=float(avg), conflict_pairs=pairs)
+def decide_from_pairs(pairs: jax.Array, p: int, psi: float) -> ESDecision:
+    """Alg. 3 lines 20-23 from the exact ordered-pair count.
+
+    ``pairs`` is integer-valued, so ``conflicts == conflict_pairs / p`` holds
+    exactly — no float round-trip can drift the count.
+    """
+    n_pairs = int(pairs)
+    avg = n_pairs / p
+    return ESDecision(stop=avg >= psi, conflicts=avg, conflict_pairs=n_pairs)

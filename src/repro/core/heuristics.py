@@ -17,6 +17,17 @@ def heuristic_from_omega(omega: jax.Array) -> jax.Array:
 
 
 def update_heuristic_rows(h: jax.Array, omega: jax.Array, rows: jax.Array) -> jax.Array:
-    """Recompute H only for the given client rows (Alg. 4 line 17)."""
-    fresh = heuristic_from_omega(omega)
-    return h.at[rows].set(fresh[rows])
+    """Recompute H only for the given client rows (Alg. 4 line 17).
+
+    Only the K refreshed rows of Ω can have changed, so this gathers just
+    ``omega[rows]`` — O(K·M) instead of the full O(M²) row-sum recompute.
+    Each row's own diagonal entry is zeroed *before* the sum (not subtracted
+    after), so every row reduces in exactly the order the masked full
+    recompute uses and the result is bitwise equal to ``heuristic_from_omega``
+    on those rows.  jit/scan-compatible (``rows`` may be traced);
+    golden-tested against the full recompute.
+    """
+    sub = omega[rows]                                   # (K, M)
+    k = sub.shape[0]
+    sub = sub.at[jnp.arange(k), rows].set(0.0)          # exclude Ω[r, r]
+    return h.at[rows].set(jnp.sum(sub, axis=1))

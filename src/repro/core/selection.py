@@ -45,6 +45,41 @@ def select_clients(
     return jnp.asarray(np.sort(order[:p])), True
 
 
+def select_clients_device(
+    rng: jax.Array,
+    heuristic: jax.Array,
+    phi: jax.Array,
+    p: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 2 fully on device — jit/scan-traceable (no host sync).
+
+    Bit-for-bit equivalent to :func:`select_clients` given the same key:
+
+    * the Bernoulli explore flip consumes the same subkey, and ``phi`` is the
+      host-precomputed fp32 explore probability (``decay ** t`` rounded from
+      f64 exactly as the reference's weak-typed ``uniform < phi`` compare
+      rounds it);
+    * the explore branch is the identical ``jax.random.choice`` draw;
+    * the exploit branch replaces the NumPy lexsort with ``lax.top_k``, whose
+      equal-value tie-break (lower index first) matches ``(-H, id)`` lexsort
+      ordering exactly.
+
+    Both branches are computed and the winner selected with ``where`` — the
+    O(M log M) work is trivial next to a training round.  Returns
+    ``(ids (p,) int32 sorted, exploited bool scalar)``.
+    """
+    m = heuristic.shape[0]
+    if p > m:
+        raise ValueError(f"cannot select P={p} from M={m} clients")
+    rng_flip, rng_perm = jax.random.split(rng)
+    explore = jax.random.uniform(rng_flip) < jnp.asarray(phi, jnp.float32)
+    explore_ids = jnp.sort(jax.random.choice(rng_perm, m, shape=(p,), replace=False))
+    _, top = jax.lax.top_k(heuristic, p)
+    exploit_ids = jnp.sort(top)
+    ids = jnp.where(explore, explore_ids.astype(jnp.int32), exploit_ids.astype(jnp.int32))
+    return ids, jnp.logical_not(explore)
+
+
 def top_p_by_heuristic(heuristic: jax.Array, p: int) -> jax.Array:
     """Pure exploit selection (used by tests and the ES analysis)."""
     m = heuristic.shape[0]

@@ -14,7 +14,7 @@ State carried across rounds (Table 1):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -198,3 +198,129 @@ class FLrceServer:
 
     def advance_round(self) -> None:
         self.state = dataclasses.replace(self.state, t=self.state.t + 1)
+
+    # -- functional (scan-driver) variants -----------------------------------
+    # Pure, jit/scan-traceable versions of select / ingest / check_early_stop
+    # operating on a device-resident carry dict instead of ``self.state``, so
+    # the compiled round driver can fuse whole round chunks into one
+    # ``lax.scan`` program.  ``scan_carry``/``load_scan_carry`` convert
+    # between the host state and the carry at chunk boundaries.  Only the
+    # single-device maps are supported (a mesh-bound server keeps the loop
+    # driver's per-round path).
+
+    def scan_carry(self) -> Dict[str, jax.Array]:
+        """Export the server state as a device carry (all arrays)."""
+        if self.mesh is not None:
+            raise ValueError("scan carry does not support mesh-bound servers")
+        st = self.state
+        return {
+            "rng": self._rng,
+            "omega": st.omega,
+            "heuristic": st.heuristic,
+            "updates": st.updates,
+            "anchors": st.anchors,
+            "last_round": st.last_round,
+            "es_stopped": jnp.asarray(st.stopped),
+            "es_stop_round": jnp.asarray(
+                -1 if st.stop_round is None else st.stop_round, jnp.int32
+            ),
+            "conflicts": jnp.asarray(st.last_conflicts, jnp.float32),
+        }
+
+    def scan_select(
+        self, carry: Dict[str, jax.Array], phi: jax.Array
+    ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
+        """Alg. 2 on device: same key split sequence as :meth:`select`."""
+        rng, sub = jax.random.split(carry["rng"])
+        ids, exploited = selection.select_clients_device(
+            sub, carry["heuristic"], phi, self.p
+        )
+        return {**carry, "rng": rng}, ids, exploited
+
+    def scan_ingest(
+        self,
+        carry: Dict[str, jax.Array],
+        w_t: jax.Array,
+        ids: jax.Array,           # (P,) traced client ids
+        client_updates: jax.Array,  # (P, D)
+        t: jax.Array,
+    ) -> Dict[str, jax.Array]:
+        """:meth:`ingest` as a pure function of the carry (traced ids/t)."""
+        w32 = w_t.astype(jnp.float32)
+        u32 = client_updates.astype(jnp.float32)
+        updates = carry["updates"].at[ids].set(u32)
+        anchors = carry["anchors"].at[ids].set(w32[None, :])
+        last_round = carry["last_round"].at[ids].set(t.astype(jnp.int32))
+        rows = relationship.relationship_block(
+            ids, u32, w32, updates, anchors, last_round, t,
+            carry["omega"][ids],
+        )
+        omega = carry["omega"].at[ids].set(rows)
+        heuristic = heuristics.update_heuristic_rows(carry["heuristic"], omega, ids)
+        return {
+            **carry,
+            "omega": omega,
+            "heuristic": heuristic,
+            "updates": updates,
+            "anchors": anchors,
+            "last_round": last_round,
+        }
+
+    def scan_check_early_stop(
+        self,
+        carry: Dict[str, jax.Array],
+        selected_updates: jax.Array,
+        t: jax.Array,
+        exploited: jax.Array,
+    ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+        """Alg. 3 on device: same bookkeeping as :meth:`check_early_stop`.
+
+        Returns ``(carry, stop)`` where ``stop`` is this round's decision
+        (explore rounds never stop), mirroring the host path's gating.
+
+        The stop compare happens on the exact integer pair count against a
+        host-precomputed integer threshold (the smallest count whose f64
+        average reaches ψ), so the decision is bitwise-identical to the host
+        path's ``pairs / p >= psi`` in f64 — an on-device fp32 division
+        could flip a near-threshold round.
+        """
+        p = selected_updates.shape[0]
+        pairs = early_stopping.conflict_pairs(selected_updates)
+        avg = jnp.where(exploited, pairs / p, 0.0)
+        # smallest integer n with n / p >= psi, resolved in host f64
+        n0 = max(0, int(np.ceil(self.psi * p)))
+        while n0 > 0 and (n0 - 1) / p >= self.psi:
+            n0 -= 1
+        while n0 / p < self.psi:
+            n0 += 1
+        dec_stop = jnp.logical_and(exploited, pairs >= jnp.float32(n0))
+        prev_stopped = carry["es_stopped"]
+        return {
+            **carry,
+            "es_stopped": jnp.logical_or(prev_stopped, dec_stop),
+            "es_stop_round": jnp.where(
+                prev_stopped,
+                carry["es_stop_round"],
+                jnp.where(dec_stop, t.astype(jnp.int32), jnp.int32(-1)),
+            ),
+            "conflicts": avg.astype(jnp.float32),
+        }, dec_stop
+
+    def load_scan_carry(
+        self, carry: Dict[str, jax.Array], t_next: int, last_exploit: bool
+    ) -> None:
+        """Write a chunk's final carry back into the host state (chunk flush)."""
+        stop_round = int(carry["es_stop_round"])
+        self.state = FLrceState(
+            t=int(t_next),
+            omega=carry["omega"],
+            heuristic=carry["heuristic"],
+            updates=carry["updates"],
+            anchors=carry["anchors"],
+            last_round=carry["last_round"],
+            stopped=bool(carry["es_stopped"]),
+            stop_round=None if stop_round < 0 else stop_round,
+            last_conflicts=float(carry["conflicts"]),
+        )
+        self._rng = carry["rng"]
+        self._last_exploit = bool(last_exploit)

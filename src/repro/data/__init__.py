@@ -1,4 +1,5 @@
 """Data substrate: Dirichlet non-iid partitioning + synthetic federated sets."""
+from repro.data.device import ChunkSchedule, DeviceClientStore, build_chunk_schedule
 from repro.data.loader import epoch_batches, num_batches
 from repro.data.partition import (
     dirichlet_label_partition,
@@ -14,6 +15,9 @@ from repro.data.synthetic import (
 from repro.data.tokens import SiloTokenStream
 
 __all__ = [
+    "ChunkSchedule",
+    "DeviceClientStore",
+    "build_chunk_schedule",
     "epoch_batches",
     "num_batches",
     "dirichlet_label_partition",

@@ -1,0 +1,164 @@
+"""Device-resident client store for the compiled (scan) round driver.
+
+The loop drivers rebuild and upload a fresh ``(P, S, B, *feat)`` cohort plan
+every round — O(cohort bytes) of host work and host→device traffic per round.
+The scan driver instead uploads every client's shard ONCE as stacked
+``(M, N_max, …)`` tensors and, per chunk of rounds, only the *batch index*
+schedules (int32, ~feature_dim× smaller).  Selection then happens inside the
+jitted chunk program and the round's ``(P, S, B, …)`` batches are gathered
+on device from the store.
+
+Numerics contract: a schedule entry is drawn from the same per-``(t, client)``
+fold-in stream the loop engines consume (``repro.fl.client.client_batch_rng``,
+passed in as ``rng_for``), and padding follows ``build_cohort_plan`` exactly —
+padded samples carry zero weight and padded steps zero validity, so a
+gathered cohort reproduces the batched engine's math bit-for-bit up to fp32
+reduction order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import bucket_steps as _bucket_steps
+from repro.data.synthetic import FederatedDataset
+
+
+@dataclasses.dataclass
+class DeviceClientStore:
+    """Every client's shard stacked into device tensors, padded to N_max."""
+
+    x: jax.Array              # (M, N_max, *feat) float32
+    y: jax.Array              # (M, N_max) int32
+    sizes: jax.Array          # (M,) int32 — real samples per client
+    sizes_host: np.ndarray    # host copy for schedule building / the ledger
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+    @classmethod
+    def from_dataset(cls, ds: FederatedDataset) -> "DeviceClientStore":
+        sizes = ds.client_sizes().astype(np.int32)
+        m = len(ds.client_indices)
+        n_max = max(1, int(sizes.max()) if m else 1)
+        feat = ds.x.shape[1:]
+        x = np.zeros((m, n_max, *feat), np.float32)
+        y = np.zeros((m, n_max), np.int32)
+        for k in range(m):
+            xk, yk = ds.client_data(k)
+            x[k, : len(xk)] = xk
+            y[k, : len(yk)] = yk
+        return cls(
+            x=jnp.asarray(x),
+            y=jnp.asarray(y),
+            sizes=jnp.asarray(sizes),
+            sizes_host=sizes,
+        )
+
+    def gather_cohort(
+        self,
+        ids: jax.Array,           # (P,) traced client ids
+        batch_idx: jax.Array,     # (M, S, B) int32 — this round's schedule
+        sample_w: jax.Array,      # (M, S, B) float32
+        step_valid: jax.Array,    # (M, S) float32
+    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+        """Materialize the selected cohort's padded batches on device.
+
+        Traceable (runs inside the scan body, after on-device selection).
+        Returns ``(x (P,S,B,*feat), y (P,S,B), sample_w (P,S,B),
+        step_valid (P,S))`` — exactly a :class:`CohortPlan`'s arrays.
+        """
+        bi = batch_idx[ids]                              # (P, S, B)
+        rows = ids[:, None, None]
+        return self.x[rows, bi], self.y[rows, bi], sample_w[ids], step_valid[ids]
+
+
+@dataclasses.dataclass
+class ChunkSchedule:
+    """Host-built batch schedules for a chunk of rounds [t0, t0 + R).
+
+    Index tensors only — the samples themselves never leave the device store.
+    Built for ALL M clients because selection is decided on device inside the
+    chunk program; a round's slice is gathered by the selected ids.
+    """
+
+    t0: int
+    batch_idx: np.ndarray     # (R, M, S, B) int32 — indices into a store row
+    sample_w: np.ndarray      # (R, M, S, B) float32: 1 = real sample, 0 = pad
+    step_valid: np.ndarray    # (R, M, S) float32: 1 = real step, 0 = pad
+
+    @property
+    def num_rounds(self) -> int:
+        return self.batch_idx.shape[0]
+
+    @property
+    def num_steps(self) -> int:
+        return self.batch_idx.shape[2]
+
+
+def build_chunk_schedule(
+    sizes: np.ndarray,                       # (M,) samples per client
+    epochs: np.ndarray,                      # (R, M) local epochs per (round, client)
+    batch_size: int,
+    t0: int,
+    rng_for: Callable[[int, int], np.random.Generator],
+    *,
+    bucket_steps: bool = True,
+) -> ChunkSchedule:
+    """Draw every (round, client) batch schedule for a chunk of rounds.
+
+    ``rng_for(t, cid)`` must return the same independent stream the loop
+    engines use (``client_batch_rng``); each stream is consumed exactly like
+    ``build_cohort_plan`` consumes it — one ``permutation(n)`` per epoch, in
+    epoch order — so the scan driver's schedules are placement- and
+    driver-independent.  The step axis is sized to the chunk-wide maximum and
+    bucketed to a power of two so the jitted chunk program retraces per size
+    bucket, not per chunk.
+    """
+    sizes = np.asarray(sizes)
+    epochs = np.asarray(epochs)
+    r_rounds, m = epochs.shape
+    if len(sizes) != m:
+        raise ValueError(f"sizes has {len(sizes)} clients, epochs has {m}")
+    per_round = []
+    s_max = 1
+    for r in range(r_rounds):
+        t = t0 + r
+        per_client = []
+        for cid in range(m):
+            n = int(sizes[cid])
+            e = max(1, int(epochs[r, cid]))
+            nb = -(-n // batch_size) if n else 0
+            s_k = e * nb
+            idx = np.zeros((s_k, batch_size), np.int32)
+            w = np.zeros((s_k, batch_size), np.float32)
+            rng_k = rng_for(t, cid)
+            s = 0
+            for _ in range(e):
+                order = rng_k.permutation(n)
+                for start in range(0, n, batch_size):
+                    ix = order[start : start + batch_size]
+                    idx[s, : len(ix)] = ix
+                    w[s, : len(ix)] = 1.0
+                    s += 1
+            per_client.append((idx, w, s_k))
+            s_max = max(s_max, s_k)
+        per_round.append(per_client)
+
+    s_pad = _bucket_steps(s_max) if bucket_steps else s_max
+    batch_idx = np.zeros((r_rounds, m, s_pad, batch_size), np.int32)
+    sample_w = np.zeros((r_rounds, m, s_pad, batch_size), np.float32)
+    step_valid = np.zeros((r_rounds, m, s_pad), np.float32)
+    for r, per_client in enumerate(per_round):
+        for cid, (idx, w, s_k) in enumerate(per_client):
+            batch_idx[r, cid, :s_k] = idx
+            sample_w[r, cid, :s_k] = w
+            step_valid[r, cid, :s_k] = 1.0
+    return ChunkSchedule(
+        t0=t0, batch_idx=batch_idx, sample_w=sample_w, step_valid=step_valid
+    )

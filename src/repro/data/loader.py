@@ -26,3 +26,17 @@ def epoch_batches(
 
 def num_batches(n: int, batch_size: int, drop_remainder: bool = False) -> int:
     return n // batch_size if drop_remainder else -(-n // batch_size)
+
+
+def bucket_steps(s: int) -> int:
+    """Round a step-axis length up to a power of two (floor 8).
+
+    Shared by the batched cohort planner and the scan driver's chunk
+    schedules so both jitted programs retrace per size *bucket*, not per
+    exact cohort — and so their padded step axes always agree.
+    """
+    s = max(s, 1)
+    b = 8
+    while b < s:
+        b <<= 1
+    return b

@@ -4,7 +4,7 @@ from repro.fl.client import ClientTrainer
 from repro.fl.flrce import FLrce
 from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
 from repro.fl.rounds import FLResult, RoundRecord, run_federated
-from repro.fl.strategy import LocalConfig, Strategy
+from repro.fl.strategy import LocalConfig, ScanProgram, Strategy
 
 __all__ = [
     "aggregate",
@@ -18,5 +18,6 @@ __all__ = [
     "RoundRecord",
     "run_federated",
     "LocalConfig",
+    "ScanProgram",
     "Strategy",
 ]

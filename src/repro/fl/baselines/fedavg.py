@@ -4,3 +4,6 @@ from repro.fl.strategy import Strategy
 
 class FedAvg(Strategy):
     name = "fedavg"
+    # uniform host-RNG selection + identity configs: the scan driver
+    # precomputes a chunk's selections and compiles the rest of the round
+    supports_scan = True

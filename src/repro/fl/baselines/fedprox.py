@@ -10,6 +10,9 @@ from repro.fl.strategy import LocalConfig, Strategy
 
 class Fedprox(Strategy):
     name = "fedprox"
+    # base host-RNG selection; the constant per-client µ rides into the
+    # compiled chunk as a (M,) prox vector, so scan support holds
+    supports_scan = True
 
     def __init__(self, *args, mu: float = 0.01, epoch_fraction: float = 0.4, **kwargs):
         super().__init__(*args, **kwargs)

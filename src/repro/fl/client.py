@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.loader import epoch_batches
+from repro.data.loader import bucket_steps as _bucket_steps, epoch_batches
 
 PyTree = Any
 
@@ -180,16 +180,6 @@ class CohortPlan:
     @property
     def num_steps(self) -> int:
         return self.x.shape[1]
-
-
-def _bucket_steps(s: int) -> int:
-    """Round the step axis up to a power of two (floor 8) so the jitted
-    cohort program is retraced per size *bucket*, not per exact cohort."""
-    s = max(s, 1)
-    b = 8
-    while b < s:
-        b <<= 1
-    return b
 
 
 def build_cohort_plan(

@@ -10,12 +10,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.selection import explore_probability
 from repro.core.server import FLrceServer
-from repro.fl.strategy import Strategy
+from repro.fl.strategy import ScanProgram, Strategy
 
 
 class FLrce(Strategy):
     name = "flrce"
+    # selection (Alg. 2), ingest (Alg. 1/Eq. 5-7) and ES (Alg. 3) all have
+    # device-functional variants on FLrceServer, so the whole round compiles
+    supports_scan = True
 
     def __init__(
         self,
@@ -61,3 +65,39 @@ class FLrce(Strategy):
         stop = self.server.check_early_stop(updates)
         self.server.advance_round()
         return bool(stop) and self.use_es
+
+    def scan_program(self) -> ScanProgram:
+        """The paper's whole server round as traced carry functions.
+
+        select/ingest/ES consume and produce the server's scan carry (the
+        array fields of :class:`FLrceState` + the PRNG key); ``finalize``
+        writes the chunk's final carry back into ``self.server`` so host
+        inspection and a later loop-driver resume see identical state.
+        """
+        server = self.server
+        use_es = bool(self.use_es)
+
+        def select(carry, t, phi):
+            return server.scan_select(carry, phi)
+
+        def post_round(carry, t, w_before, ids, update_matrix, exploited):
+            u32 = update_matrix.astype(jnp.float32)
+            carry = server.scan_ingest(carry, w_before.astype(jnp.float32), ids, u32, t)
+            carry, stop = server.scan_check_early_stop(carry, u32, t, exploited)
+            return carry, jnp.logical_and(stop, use_es)
+
+        def explore_phis(ts):
+            return np.asarray(
+                [explore_probability(int(t), server.decay) for t in ts], np.float32
+            )
+
+        def finalize(carry, t_next, last_exploit):
+            server.load_scan_carry(carry, t_next, last_exploit)
+
+        return ScanProgram(
+            carry=server.scan_carry(),
+            select=select,
+            post_round=post_round,
+            explore_phis=explore_phis,
+            finalize=finalize,
+        )

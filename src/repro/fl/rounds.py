@@ -24,6 +24,16 @@ Every engine draws each client's batches from the same placement-independent
 fold-in stream (``client_batch_rng``) and runs the same math, so all three
 produce matching results within fp32 tolerance (tests/test_batched_engine.py,
 tests/test_sharded_engine.py).
+
+Orthogonally to the engine, ``driver`` picks how Algorithm 4's OUTER loop
+executes:
+
+* ``driver="loop"`` (default) — one Python iteration per round, one host
+  sync per round.  Works with every engine and strategy.
+* ``driver="scan"`` — whole chunks of rounds compile into one ``lax.scan``
+  program over a device-resident carry; the host syncs once per chunk
+  (``repro.fl.scan_driver``).  Requires ``engine="batched"`` and a strategy
+  with ``supports_scan``; other strategies fall back to the batched loop.
 """
 from __future__ import annotations
 
@@ -52,6 +62,7 @@ from repro.models.cnn import param_count
 PyTree = Any
 
 ENGINES = ("sequential", "batched", "sharded")
+DRIVERS = ("loop", "scan")
 
 
 @dataclasses.dataclass
@@ -115,6 +126,47 @@ def _flatten_update(update: PyTree) -> jax.Array:
     return flatten_pytree(update)[0]
 
 
+def nan_safe_mean(values: Sequence[float]) -> float:
+    """Mean over the finite entries; NaN only when EVERY entry is NaN.
+
+    A zero-step client (empty shard, or epochs × batches == 0) reports
+    ``mean_loss = NaN``; plain ``np.mean`` would poison the whole round's
+    record.  ``np.nanmean`` semantics, minus its all-NaN RuntimeWarning.
+    """
+    vals = np.asarray(list(values), np.float64)
+    finite = vals[~np.isnan(vals)]
+    return float(finite.mean()) if finite.size else float("nan")
+
+
+def finalize_result(
+    *,
+    strategy: Strategy,
+    records: List[RoundRecord],
+    stopped: bool,
+    ledger: ResourceLedger,
+    final_params: PyTree,
+) -> FLResult:
+    """Assemble the FLResult shared by the loop and scan drivers.
+
+    The terminal round (stop or ``max_rounds``) is always freshly evaluated,
+    so the last evaluated record exists whenever any round ran; the explicit
+    0.0 fallback covers the (validated-against) empty-records case instead
+    of letting ``next()`` raise ``StopIteration``.
+    """
+    final_accuracy = next(
+        (r.accuracy for r in reversed(records) if r.evaluated), 0.0
+    )
+    return FLResult(
+        strategy=strategy.name,
+        records=records,
+        final_accuracy=final_accuracy,
+        rounds_run=len(records),
+        stopped_early=stopped,
+        ledger=ledger,
+        final_params=final_params,
+    )
+
+
 def _sequential_round(
     trainer: ClientTrainer,
     params: PyTree,
@@ -157,9 +209,35 @@ def run_federated(
     verbose: bool = False,
     engine: str = "batched",
     mesh=None,
+    driver: str = "loop",
+    scan_chunk_rounds: int = 8,
 ) -> FLResult:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    if driver not in DRIVERS:
+        raise ValueError(f"driver must be one of {DRIVERS}, got {driver!r}")
+    if max_rounds < 1:
+        raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    if driver == "scan":
+        if engine != "batched":
+            raise ValueError(
+                f"driver='scan' is the compiled single-device path and requires "
+                f"engine='batched', got engine={engine!r}"
+            )
+        if strategy.supports_scan:
+            from repro.fl.scan_driver import run_scan_driver
+
+            return run_scan_driver(
+                model, dataset, strategy,
+                max_rounds=max_rounds, learning_rate=learning_rate,
+                batch_size=batch_size, device=device, eval_every=eval_every,
+                seed=seed, init_params=init_params, verbose=verbose,
+                chunk_rounds=scan_chunk_rounds,
+            )
+        # host-side per-round logic (compression, masks): fall back to the
+        # batched loop, which handles every strategy
+        if verbose:
+            print(f"[{strategy.name}] no scan support; falling back to engine='batched'")
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
     trainer: Any
@@ -278,7 +356,7 @@ def run_federated(
         rec = RoundRecord(
             t=t,
             accuracy=acc,
-            mean_client_loss=float(np.mean([s["mean_loss"] for s in stats])),
+            mean_client_loss=nan_safe_mean([s["mean_loss"] for s in stats]),
             energy_kj=ledger.energy_j / 1e3,
             bytes_gb=ledger.total_bytes / 1e9,
             selected=[int(c) for c in ids],
@@ -297,14 +375,10 @@ def run_federated(
             stopped = True
             break
 
-    # the terminal round (stop or max_rounds) is always freshly evaluated
-    final_accuracy = next(r.accuracy for r in reversed(records) if r.evaluated)
-    return FLResult(
-        strategy=strategy.name,
+    return finalize_result(
+        strategy=strategy,
         records=records,
-        final_accuracy=final_accuracy,
-        rounds_run=len(records),
-        stopped_early=stopped,
+        stopped=stopped,
         ledger=ledger,
         final_params=params,
     )

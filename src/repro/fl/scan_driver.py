@@ -1,0 +1,316 @@
+"""Compiled round driver: ``lax.scan`` over whole chunks of rounds.
+
+The loop drivers dispatch one jitted cohort program per round and sync with
+the host several times per round (plan upload, loss readback, selection,
+``bool(stop)``).  In the regime the paper targets — short rounds on small
+models — that dispatch overhead dominates.  This driver removes it:
+
+* client data lives on device once (:class:`repro.data.device.DeviceClientStore`);
+* a *chunk* of R rounds — select (Alg. 2) → gather batches → cohort train →
+  Eq. 4 aggregate → strategy ingest/ES (Alg. 1/3) — is ONE jitted
+  ``lax.scan`` program over a fully device-resident carry
+  (flat model + the strategy's :class:`ScanProgram` carry);
+* the host syncs exactly once per chunk: it reads the stacked per-round
+  outputs (ids, stop flags, accuracies, losses — O(R·P) scalars), flushes
+  ``RoundRecord``s and the resource ledger, and checks the stop flag.
+
+Numerics match the batched loop driver within fp32 tolerance: batch
+schedules come from the identical ``client_batch_rng`` fold-in streams
+(host-drawn per chunk, gathered on device), selection consumes the same PRNG
+key sequence with the same tie-breaks (``select_clients_device``), and the
+round body reuses ``BatchedCohortTrainer``'s cohort program.  After an early
+stop fires mid-chunk the remaining scan iterations still execute (a scan has
+no early exit) but their carry writes are masked out, so the final state is
+the stop round's — the wasted rounds are bounded by ``chunk_rounds``.
+
+Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()``;
+``run_federated`` falls back to the batched loop for the rest (host-side
+compression, per-round masks).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distributed import flatten_pytree
+from repro.data.device import DeviceClientStore, build_chunk_schedule
+from repro.data.synthetic import FederatedDataset
+from repro.fl.client import BatchedCohortTrainer, client_batch_rng
+from repro.fl.metrics import ResourceLedger
+from repro.fl.strategy import Strategy
+from repro.models.cnn import param_count
+
+PyTree = Any
+
+
+def _tree_where(pred, on_true, on_false):
+    """Leafwise select with a scalar predicate (freezes the carry post-stop)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false
+    )
+
+
+class _ChunkRunner:
+    """Builds and caches the jitted chunk program for one FL job."""
+
+    def __init__(self, model, store: DeviceClientStore, unflatten, program,
+                 *, learning_rate: float, batch_size: int, clients_per_round: int,
+                 eval_every: int, max_rounds: int, eval_x, eval_y):
+        self.model = model
+        self.store = store
+        self.unflatten = unflatten
+        self.program = program
+        self.p = clients_per_round
+        self.eval_every = eval_every
+        self.max_rounds = max_rounds
+        self.eval_x, self.eval_y = eval_x, eval_y
+        self._trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
+        self._train_raw = self._trainer._make_train()
+        self._cache: Dict[bool, Any] = {}
+
+    def _freeze_ones(self, params: PyTree) -> PyTree:
+        # all-trainable cohort: the (P,)-stacked per-leaf flags are all 1.0
+        return jax.tree_util.tree_map(
+            lambda _: jnp.ones((self.p,), jnp.float32), params
+        )
+
+    def _build(self, use_prox: bool):
+        store, program, unflatten = self.store, self.program, self.unflatten
+        train, p = self._train_raw, self.p
+        eval_every, max_rounds = self.eval_every, self.max_rounds
+        eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
+        sizes_f = store.sizes.astype(jnp.float32)
+
+        def body(carry, x_t):
+            w, sc, stopped, last_acc, freeze = carry
+            t, phi, host_ids, bi_t, sw_t, sv_t, prox_t = x_t
+            params_t = unflatten(w)
+
+            # --- Alg. 2 selection (device) or host-precomputed ids ----------
+            if program.select is not None:
+                sc_new, ids, exploited = program.select(sc, t, phi)
+            else:
+                sc_new, ids, exploited = sc, host_ids, jnp.asarray(False)
+
+            # --- gather the cohort's padded batches from the store ----------
+            x, y, sw, sv = store.gather_cohort(ids, bi_t, sw_t, sv_t)
+            mu = prox_t[ids]
+            _, flat, losses = train(
+                params_t, x, y, sw, sv, {}, freeze, mu,
+                use_prox=use_prox, has_mask=False,
+            )
+
+            # --- Eq. 4 aggregation from the flat buffer ---------------------
+            sel_sizes = sizes_f[ids]
+            total = jnp.sum(sel_sizes)
+            weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
+            w_new = w + weights @ flat
+
+            # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -----------
+            if program.post_round is not None:
+                sc_new, stop = program.post_round(sc_new, t, w, ids, flat, exploited)
+            else:
+                stop = jnp.asarray(False)
+
+            # --- per-round stats (device nanmean over clients) --------------
+            cnt = jnp.sum(sv, axis=1)
+            has = cnt > 0.0
+            mean_k = jnp.where(has, jnp.sum(losses * sv, axis=1) / jnp.maximum(cnt, 1.0), 0.0)
+            n_has = jnp.sum(has.astype(jnp.float32))
+            mean_loss = jnp.where(
+                n_has > 0.0, jnp.sum(mean_k) / jnp.maximum(n_has, 1.0), jnp.nan
+            )
+
+            # --- evaluation (only when the loop driver would) ---------------
+            evaluated = jnp.logical_or(
+                jnp.logical_or(t % eval_every == 0, stop), t == max_rounds - 1
+            )
+            acc = jax.lax.cond(
+                evaluated,
+                lambda wv: model.accuracy(unflatten(wv), eval_x, eval_y).astype(jnp.float32),
+                lambda wv: last_acc,
+                w_new,
+            )
+
+            # rounds after a stop still execute (scan has no early exit) but
+            # never touch the carry: the final state is the stop round's
+            new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc, freeze)
+            carry_out = _tree_where(stopped, carry, new_carry)
+            out = {
+                "ids": ids,
+                "exploited": exploited,
+                "stop": stop,
+                "acc": acc,
+                "evaluated": evaluated,
+                "mean_loss": mean_loss,
+                "valid": jnp.logical_not(stopped),
+            }
+            return carry_out, out
+
+        def chunk(w, sc, last_acc, freeze, xs):
+            carry0 = (w, sc, jnp.asarray(False), last_acc, freeze)
+            (w, sc, stopped, last_acc, _), outs = jax.lax.scan(body, carry0, xs)
+            return w, sc, last_acc, outs
+
+        return jax.jit(chunk)
+
+    def run_chunk(self, w, sc, last_acc, params_template, xs, use_prox: bool):
+        if use_prox not in self._cache:
+            self._cache[use_prox] = self._build(use_prox)
+        freeze = self._freeze_ones(params_template)
+        return self._cache[use_prox](w, sc, last_acc, freeze, xs)
+
+
+def run_scan_driver(
+    model,
+    dataset: FederatedDataset,
+    strategy: Strategy,
+    *,
+    max_rounds: int,
+    learning_rate: float,
+    batch_size: int,
+    device: str,
+    eval_every: int,
+    seed: int,
+    init_params: Optional[PyTree],
+    verbose: bool,
+    chunk_rounds: int,
+):
+    """Algorithm 4's outer loop as jitted round chunks.  Called by
+    ``run_federated(driver="scan")``; returns the same :class:`FLResult`."""
+    from repro.fl.rounds import RoundRecord, finalize_result
+
+    if chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    program = strategy.scan_program()
+    if program.post_round is not None and program.select is None:
+        raise ValueError(
+            "a ScanProgram with post_round needs device-side select: a "
+            "host-selected chunk cannot react to a device stop mid-chunk"
+        )
+    if program.select is not None and program.explore_phis is None:
+        raise ValueError("a ScanProgram with device select must provide explore_phis")
+
+    params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
+    n_params = param_count(params)
+    w, unflatten = flatten_pytree(params)
+    store = DeviceClientStore.from_dataset(dataset)
+    m = store.num_clients
+    ledger = ResourceLedger(device=device)
+    runner = _ChunkRunner(
+        model, store, unflatten, program,
+        learning_rate=learning_rate, batch_size=batch_size,
+        clients_per_round=strategy.p, eval_every=eval_every,
+        max_rounds=max_rounds,
+        eval_x=jnp.asarray(dataset.eval_x), eval_y=jnp.asarray(dataset.eval_y),
+    )
+
+    sc = program.carry
+    last_acc = jnp.float32(0.0)
+    records: List[RoundRecord] = []
+    stopped = False
+    t0 = 0
+    while t0 < max_rounds and not stopped:
+        wall0 = time.time()
+        r = min(chunk_rounds, max_rounds - t0)
+        ts = list(range(t0, t0 + r))
+
+        # per-(round, client) local configs: epochs/prox enter the compiled
+        # chunk; the ledger fractions are reused host-side at flush.
+        cfg_grid = [[strategy.client_config(t, cid, None) for cid in range(m)] for t in ts]
+        for row in cfg_grid:
+            for cfg in row:
+                if cfg.mask is not None or cfg.freeze_frac:
+                    raise ValueError(
+                        f"{strategy.name} declares supports_scan but returns "
+                        "mask/freeze_frac configs, which cannot enter the "
+                        "compiled chunk"
+                    )
+        epochs = np.asarray([[cfg.epochs for cfg in row] for row in cfg_grid], np.int32)
+        prox = np.asarray([[cfg.prox_mu for cfg in row] for row in cfg_grid], np.float32)
+        use_prox = bool(np.any(prox > 0.0))
+
+        # batch schedules from the SAME fold-in streams the loop engines use
+        sched = build_chunk_schedule(
+            store.sizes_host, epochs, batch_size, t0,
+            lambda t, cid: client_batch_rng(seed, t, cid),
+        )
+        if program.select is None:
+            host_ids = np.stack([np.asarray(strategy.select(t)) for t in ts]).astype(np.int32)
+            phis = np.zeros(r, np.float32)
+        else:
+            host_ids = np.zeros((r, strategy.p), np.int32)
+            phis = program.explore_phis(np.asarray(ts))
+
+        xs = (
+            jnp.arange(t0, t0 + r, dtype=jnp.int32),
+            jnp.asarray(phis),
+            jnp.asarray(host_ids),
+            jnp.asarray(sched.batch_idx),
+            jnp.asarray(sched.sample_w),
+            jnp.asarray(sched.step_valid),
+            jnp.asarray(prox),
+        )
+        w, sc, last_acc, outs = runner.run_chunk(w, sc, last_acc, params, xs, use_prox)
+        outs = jax.device_get(outs)            # the chunk's ONE host sync
+
+        # --- host flush: ledger + RoundRecords + stop check -----------------
+        flushed = 0
+        for i in range(r):
+            if not outs["valid"][i]:
+                break
+            t = t0 + i
+            ids = [int(c) for c in outs["ids"][i]]
+            for cid in ids:
+                cfg = cfg_grid[i][cid]
+                flops = (
+                    model.flops_per_sample() * int(store.sizes_host[cid])
+                    * cfg.epochs * cfg.compute_fraction
+                )
+                ledger.charge_training(flops)
+                ledger.charge_download(n_params, cfg.download_fraction)
+                ledger.charge_upload(n_params, cfg.upload_fraction)
+            ledger.end_round()
+            rec = RoundRecord(
+                t=t,
+                accuracy=float(outs["acc"][i]),
+                mean_client_loss=float(outs["mean_loss"][i]),
+                energy_kj=ledger.energy_j / 1e3,
+                bytes_gb=ledger.total_bytes / 1e9,
+                selected=ids,
+                exploited=bool(outs["exploited"][i]),
+                stopped=bool(outs["stop"][i]),
+                wall_s=0.0,                    # chunk wall amortized below
+                evaluated=bool(outs["evaluated"][i]),
+            )
+            records.append(rec)
+            flushed += 1
+            if verbose:
+                print(
+                    f"[{strategy.name}] round {t:3d} acc={rec.accuracy:.4f} "
+                    f"loss={rec.mean_client_loss:.4f} stop={rec.stopped}"
+                )
+            if rec.stopped:
+                stopped = True
+                break
+        # chunk wall (schedule build + compiled chunk + flush bookkeeping,
+        # i.e. everything the loop driver's per-round wall_s covers),
+        # amortized over the flushed rounds
+        wall = time.time() - wall0
+        for rec in records[-flushed:] if flushed else []:
+            rec.wall_s = wall / flushed
+        if program.finalize is not None and flushed:
+            program.finalize(sc, t0 + flushed, bool(outs["exploited"][flushed - 1]))
+        t0 += flushed if stopped else r
+
+    return finalize_result(
+        strategy=strategy,
+        records=records,
+        stopped=stopped,
+        ledger=ledger,
+        final_params=unflatten(w),
+    )

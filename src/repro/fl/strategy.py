@@ -8,12 +8,48 @@ used by the resource ledger.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+
+@dataclasses.dataclass
+class ScanProgram:
+    """A strategy's device-functional round pieces for the scan driver.
+
+    The compiled driver (``driver="scan"``) fuses whole round chunks into one
+    ``lax.scan`` program; everything a strategy contributes inside the chunk
+    must be a pure traced function of the ``carry`` pytree:
+
+    * ``carry`` — initial device state carried across rounds (``{}`` for a
+      stateless strategy).
+    * ``select(carry, t, phi) -> (carry, ids, exploited)`` — on-device
+      selection (Alg. 2 for FLrce).  ``None`` ⇒ selection is independent of
+      round results and the driver precomputes a chunk's ids on host via the
+      ordinary :meth:`Strategy.select` (FedAvg's NumPy draw).
+    * ``post_round(carry, t, w_before, ids, update_matrix, exploited) ->
+      (carry, stop)`` — per-round bookkeeping + the stop decision, all on
+      device.  ``None`` ⇒ no bookkeeping and never stops.  Only allowed
+      together with ``select`` (a host-selected chunk cannot react to a
+      device stop mid-chunk).
+    * ``explore_phis(ts) -> float32 array`` — host-precomputed explore
+      probabilities for a chunk's rounds (``select`` consumes them traced;
+      precomputing in f64 keeps the Bernoulli flip bit-identical to the host
+      reference).  Required iff ``select`` is given.
+    * ``finalize(carry, t_next, last_exploit)`` — host write-back of the
+      chunk's final carry into the strategy's mutable state at each chunk
+      flush, so loop-driver consumers (``last_round_was_exploit``, server
+      state inspection) stay coherent.
+    """
+
+    carry: Any
+    select: Optional[Callable] = None
+    post_round: Optional[Callable] = None
+    explore_phis: Optional[Callable] = None
+    finalize: Optional[Callable] = None
 
 
 @dataclasses.dataclass
@@ -58,6 +94,36 @@ class Strategy:
         the device-resident flat update matrix directly.  Derived, so a new
         compression strategy cannot silently skip its own processing."""
         return type(self).process_update is not Strategy.process_update
+
+    # -- compiled (scan) driver contract --------------------------------------
+    supports_scan: bool = False
+    """True ⇒ ``driver="scan"`` compiles this strategy's whole round.
+
+    Declaring support is a promise the scan driver relies on:
+
+    * ``client_config(t, cid, None)`` is pure (no RNG side effects),
+      independent of the global params, and returns neither ``mask`` nor
+      ``freeze_frac`` (per-round host-built pytrees cannot enter the
+      compiled chunk);
+    * ``process_update`` is the identity (``processes_updates`` is False);
+    * selection is either the base host-RNG draw (independent of round
+      results, precomputable per chunk) or provided on device via
+      :meth:`scan_program`.
+
+    Strategies with host-side per-round logic (compression, dropout masks,
+    layer freezing) keep the default False and fall back to the batched
+    loop driver.
+    """
+
+    def scan_program(self) -> ScanProgram:
+        """The strategy's device-functional pieces for the scan driver.
+
+        Base: a stateless program — host-precomputed selection, no per-round
+        bookkeeping, never stops (FedAvg/Fedprox behavior).
+        """
+        if not self.supports_scan:
+            raise NotImplementedError(f"{self.name} does not support driver='scan'")
+        return ScanProgram(carry={})
 
     # -- execution placement --------------------------------------------------
     def bind_mesh(self, mesh, axes) -> None:

@@ -9,11 +9,13 @@ import pytest
 
 from repro.core import (
     conflict_degree,
+    conflict_pairs,
     explore_probability,
     heuristic_from_omega,
     select_clients,
     should_stop,
     top_p_by_heuristic,
+    update_heuristic_rows,
 )
 
 
@@ -72,3 +74,62 @@ def test_paper_figure9_example():
     d = should_stop(jnp.stack([u2, u3]), psi=1.0, is_exploit_round=True)
     assert d.conflicts == pytest.approx(1.0)  # each client has 1 conflicting peer
     assert d.stop
+
+
+def test_conflict_pairs_is_exact_integer_count():
+    """Regression: conflict_pairs must be the exact ordered-pair count, not
+    a round-trip through the normalized average (which drifts for large P).
+    ``conflicts == conflict_pairs / p`` must hold exactly."""
+    rng = np.random.default_rng(0)
+    for p in (2, 3, 7, 64, 257):
+        u = jnp.asarray(rng.normal(size=(p, 4)), jnp.float32)
+        d = should_stop(u, psi=1e9, is_exploit_round=True)
+        # brute-force reference count over sign of pairwise cossims
+        un = np.asarray(u, np.float64)
+        un = un / np.maximum(np.linalg.norm(un, axis=1, keepdims=True), 1e-12)
+        g = un @ un.T
+        want = int(np.sum((g < 0) & ~np.eye(p, dtype=bool)))
+        assert d.conflict_pairs == want, p
+        assert d.conflicts == d.conflict_pairs / p, p
+        assert float(conflict_pairs(u)) == want
+        assert float(conflict_degree(u)) == pytest.approx(want / p)
+
+
+def test_scan_es_decision_matches_host_near_threshold():
+    """The scan carry's stop decision (integer pair count vs host-derived
+    integer threshold) must equal the host f64 ``pairs / p >= psi`` compare
+    for every pair count — including psi exactly on a representable
+    boundary, where an on-device fp32 division could flip the decision."""
+    from repro.core.server import FLrceServer
+
+    rng = np.random.default_rng(0)
+    p, d = 7, 6
+    for psi in (0.0, 1e-6, 2 / 7, 0.2857143, 1.0, 41 / 7, 6.0):
+        server = FLrceServer(num_clients=10, dim=d, clients_per_round=p,
+                             es_threshold=psi, seed=0)
+        carry = server.scan_carry()
+        for _ in range(8):
+            u = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+            host = should_stop(u, psi=psi, is_exploit_round=True)
+            _, dev_stop = server.scan_check_early_stop(
+                carry, u, jnp.int32(0), jnp.asarray(True)
+            )
+            assert bool(dev_stop) == host.stop, psi
+
+
+def test_update_heuristic_rows_matches_full_recompute():
+    """The O(K·M) row-local refresh must equal the O(M²) full recompute on
+    the refreshed rows and leave every other row untouched."""
+    rng = np.random.default_rng(3)
+    m = 12
+    omega = jnp.asarray(rng.normal(size=(m, m)), jnp.float32)
+    h_prev = jnp.asarray(rng.normal(size=(m,)), jnp.float32)
+    rows = jnp.asarray([0, 4, 7, 11])
+    got = update_heuristic_rows(h_prev, omega, rows)
+    full = heuristic_from_omega(omega)
+    rows_np = np.asarray(rows)
+    np.testing.assert_array_equal(np.asarray(got)[rows_np], np.asarray(full)[rows_np])
+    untouched = np.setdiff1d(np.arange(m), rows_np)
+    np.testing.assert_array_equal(
+        np.asarray(got)[untouched], np.asarray(h_prev)[untouched]
+    )

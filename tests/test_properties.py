@@ -105,6 +105,20 @@ def test_es_monotone_in_psi(p, psi):
         assert d_lo.stop
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 200), st.integers(1, 6), st.integers(0, 100))
+def test_es_conflicts_is_exact_pair_ratio(p, d, seed):
+    """conflicts == conflict_pairs / p exactly: the pair count is the
+    primitive integer quantity, never re-derived through a lossy
+    normalize/denormalize round-trip."""
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(rng.normal(size=(p, d)), jnp.float32)
+    dec = should_stop(u, psi=0.5, is_exploit_round=True)
+    assert isinstance(dec.conflict_pairs, int)
+    assert dec.conflicts == dec.conflict_pairs / p
+    assert 0 <= dec.conflict_pairs <= p * (p - 1)
+
+
 # ---------------------------------------------------------------------------
 # data partitioning
 # ---------------------------------------------------------------------------

@@ -1,0 +1,312 @@
+"""Scan-driver equivalence suite (DESIGN.md §1, compiled round driver).
+
+``driver="scan"`` compiles whole round chunks into one ``lax.scan`` program;
+it must reproduce the batched loop driver within fp32 tolerance — identical
+selection sequences, exploited flags, stop rounds and evaluation schedule,
+matching accuracies/losses — across FLrce, FedAvg and Fedprox, for every
+chunk/round-count alignment, with strategies lacking scan support falling
+back to the batched loop.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selection import explore_probability, select_clients, select_clients_device
+from repro.data import DeviceClientStore, build_chunk_schedule, make_federated_classification
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import FedAvg, Fedcom, Fedprox
+from repro.fl.client import build_cohort_plan, client_batch_rng
+from repro.models.cnn import MLPClassifier, param_count
+
+
+@pytest.fixture(scope="module")
+def tiny_fed():
+    ds = make_federated_classification(
+        num_clients=8, alpha=0.2, num_samples=800, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    return ds, MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+
+
+def _run_both(model, ds, make_strategy, *, chunk=3, **kw):
+    bat = run_federated(model, ds, make_strategy(), engine="batched", **kw)
+    scn = run_federated(
+        model, ds, make_strategy(), engine="batched", driver="scan",
+        scan_chunk_rounds=chunk, **kw,
+    )
+    return bat, scn
+
+
+def _assert_records_match(bat, scn):
+    assert [r.selected for r in bat.records] == [r.selected for r in scn.records]
+    assert [r.exploited for r in bat.records] == [r.exploited for r in scn.records]
+    assert [r.stopped for r in bat.records] == [r.stopped for r in scn.records]
+    assert [r.evaluated for r in bat.records] == [r.evaluated for r in scn.records]
+    np.testing.assert_allclose(bat.accuracy_curve(), scn.accuracy_curve(), atol=2e-3)
+    for a, b in zip(bat.records, scn.records):
+        if np.isnan(a.mean_client_loss):
+            assert np.isnan(b.mean_client_loss)
+        else:
+            assert a.mean_client_loss == pytest.approx(b.mean_client_loss, abs=1e-4)
+    assert bat.rounds_run == scn.rounds_run
+    assert bat.stopped_early == scn.stopped_early
+    assert bat.final_accuracy == pytest.approx(scn.final_accuracy, abs=2e-3)
+    # ledger bookkeeping is pure host arithmetic over identical selections
+    assert bat.ledger.energy_j == pytest.approx(scn.ledger.energy_j, rel=1e-12)
+    assert bat.ledger.total_bytes == pytest.approx(scn.ledger.total_bytes, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# scan ≡ batched through run_federated
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls,kw", [
+    (FedAvg, {}),
+    (Fedprox, {"mu": 0.01}),
+])
+def test_scan_matches_batched_host_selected(tiny_fed, cls, kw):
+    ds, model = tiny_fed
+    bat, scn = _run_both(
+        model, ds, lambda: cls(8, 3, 2, seed=0, **kw),
+        max_rounds=4, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    _assert_records_match(bat, scn)
+
+
+def test_scan_matches_batched_flrce_full_loop(tiny_fed):
+    """Device-side Alg. 2 selection + Alg. 1 ingest + Alg. 3 ES inside the
+    compiled chunk vs the loop driver's host orchestration."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    bat, scn = _run_both(
+        model, ds, lambda: FLrce(8, 3, 2, dim=dim, es_threshold=2.0, seed=0),
+        max_rounds=5, learning_rate=0.1, batch_size=16, seed=0, chunk=2,
+    )
+    _assert_records_match(bat, scn)
+
+
+def test_scan_matches_batched_flrce_early_stop_mid_chunk(tiny_fed):
+    """A stop firing mid-chunk must freeze the carry: the flushed records,
+    stop round and final state all match the loop driver's early exit."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    mk = lambda: FLrce(8, 3, 1, dim=dim, es_threshold=1e-6, explore_decay=0.01, seed=0)
+    bat, scn = _run_both(
+        model, ds, mk,
+        max_rounds=40, learning_rate=0.8, batch_size=16, seed=0, chunk=8,
+    )
+    assert bat.stopped_early and scn.stopped_early
+    assert bat.rounds_run < 40
+    _assert_records_match(bat, scn)
+    assert scn.records[-1].stopped and scn.records[-1].evaluated
+
+
+def test_scan_server_state_write_back_matches_loop(tiny_fed):
+    """Chunk flush writes the carry back into FLrceServer: Ω/H/V/A/R, the
+    PRNG key, t and the exploit flag equal the loop driver's server state."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    sb = FLrce(8, 3, 1, dim=dim, es_threshold=2.0, seed=0)
+    ss = FLrce(8, 3, 1, dim=dim, es_threshold=2.0, seed=0)
+    run_federated(model, ds, sb, max_rounds=5, learning_rate=0.1, batch_size=16, seed=0)
+    run_federated(model, ds, ss, max_rounds=5, learning_rate=0.1, batch_size=16,
+                  seed=0, driver="scan", scan_chunk_rounds=2)
+    st_b, st_s = sb.server.state, ss.server.state
+    assert st_b.t == st_s.t
+    assert np.array_equal(np.asarray(sb.server._rng), np.asarray(ss.server._rng))
+    np.testing.assert_allclose(
+        np.asarray(st_b.omega), np.asarray(st_s.omega), atol=5e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(st_b.heuristic), np.asarray(st_s.heuristic), atol=5e-4
+    )
+    assert np.array_equal(np.asarray(st_b.last_round), np.asarray(st_s.last_round))
+    assert st_b.stopped == st_s.stopped and st_b.stop_round == st_s.stop_round
+    assert sb.last_round_was_exploit == ss.last_round_was_exploit
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 5, 8])
+def test_scan_chunk_alignment_invariance(tiny_fed, chunk):
+    """Round results must not depend on how rounds are chunked (including a
+    tail chunk shorter than chunk_rounds and chunk > max_rounds)."""
+    ds, model = tiny_fed
+    res = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=5, learning_rate=0.1,
+        batch_size=16, seed=0, driver="scan", scan_chunk_rounds=chunk,
+    )
+    ref = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=5, learning_rate=0.1,
+        batch_size=16, seed=0,
+    )
+    _assert_records_match(ref, res)
+
+
+def test_scan_fallback_for_compression_strategies(tiny_fed):
+    """Fedcom has host-side per-round compression: driver='scan' silently
+    falls back to the batched loop and reproduces it exactly."""
+    ds, model = tiny_fed
+    assert not Fedcom(8, 3, 1, seed=0).supports_scan
+    bat, scn = _run_both(
+        model, ds, lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
+        max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    _assert_records_match(bat, scn)
+
+
+def test_scan_rejects_non_batched_engines(tiny_fed):
+    ds, model = tiny_fed
+    with pytest.raises(ValueError, match="batched"):
+        run_federated(model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=1,
+                      engine="sequential", driver="scan")
+    with pytest.raises(ValueError, match="driver"):
+        run_federated(model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=1,
+                      driver="warp")
+
+
+# ---------------------------------------------------------------------------
+# round-loop edge cases (both drivers)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("driver", ["loop", "scan"])
+def test_eval_every_beyond_max_rounds(tiny_fed, driver):
+    """eval_every > max_rounds: only t=0 and the terminal round evaluate."""
+    ds, model = tiny_fed
+    res = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=4, learning_rate=0.1,
+        batch_size=16, seed=0, eval_every=100, driver=driver,
+    )
+    assert [r.evaluated for r in res.records] == [True, False, False, True]
+    assert res.records[1].accuracy == res.records[0].accuracy
+    assert res.final_accuracy == res.records[-1].accuracy
+
+
+@pytest.mark.parametrize("driver", ["loop", "scan"])
+def test_full_participation_cohort(tiny_fed, driver):
+    """clients_per_round == num_clients: explore and exploit pick the same
+    (full) set, and both drivers agree on every record."""
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    res = run_federated(
+        model, ds, FLrce(8, 8, 1, dim=dim, es_threshold=50.0, seed=0),
+        max_rounds=3, learning_rate=0.1, batch_size=16, seed=0, driver=driver,
+    )
+    for rec in res.records:
+        assert rec.selected == list(range(8))
+    assert res.rounds_run == 3
+
+
+def test_full_participation_scan_matches_batched(tiny_fed):
+    ds, model = tiny_fed
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    bat, scn = _run_both(
+        model, ds, lambda: FLrce(8, 8, 1, dim=dim, es_threshold=50.0, seed=0),
+        max_rounds=3, learning_rate=0.1, batch_size=16, seed=0, chunk=2,
+    )
+    _assert_records_match(bat, scn)
+
+
+def test_max_rounds_zero_rejected(tiny_fed):
+    """Regression: max_rounds=0 used to raise StopIteration from
+    ``next(r.accuracy ...)`` on the empty record list."""
+    ds, model = tiny_fed
+    for driver in ("loop", "scan"):
+        with pytest.raises(ValueError, match="max_rounds"):
+            run_federated(model, ds, FedAvg(8, 3, 1, seed=0), max_rounds=0,
+                          driver=driver)
+
+
+@pytest.mark.parametrize("driver", ["loop", "scan"])
+def test_empty_shard_client_does_not_poison_round_loss(tiny_fed, driver):
+    """Regression: a zero-step client's NaN mean_loss must not NaN the
+    round's mean_client_loss (np.nanmean semantics in both drivers)."""
+    ds, model = tiny_fed
+    idx = [np.asarray(ix) for ix in ds.client_indices]
+    idx[3] = np.asarray([], np.int64)
+    ds_empty = dataclasses.replace(ds, client_indices=idx)
+    res = run_federated(
+        model, ds_empty, FedAvg(8, 8, 1, seed=0), max_rounds=2,
+        learning_rate=0.1, batch_size=16, seed=0, driver=driver,
+    )
+    for rec in res.records:
+        assert np.isfinite(rec.mean_client_loss)
+
+
+# ---------------------------------------------------------------------------
+# device selection ≡ NumPy reference (Alg. 2)
+# ---------------------------------------------------------------------------
+def test_select_clients_device_matches_host_reference():
+    """Same key ⇒ identical ids + exploited flag, across explore/exploit
+    regimes and heuristic ties (lax.top_k vs lexsort tie-break)."""
+    rng = np.random.default_rng(0)
+    m, p, decay = 10, 4, 0.9
+    key = jax.random.PRNGKey(7)
+    for t in range(0, 60, 3):
+        key, sub = jax.random.split(key)
+        # quantized heuristics force ties; id tie-break must match
+        h = jnp.asarray(rng.choice([0.0, 0.5, 1.0, 2.0], size=m), jnp.float32)
+        ids_ref, exp_ref = select_clients(sub, h, t, p, decay)
+        phi = np.float32(explore_probability(t, decay))
+        ids_dev, exp_dev = jax.jit(
+            lambda k, hh: select_clients_device(k, hh, phi, p)
+        )(sub, h)
+        assert np.array_equal(np.asarray(ids_ref), np.asarray(ids_dev)), t
+        assert bool(exp_ref) == bool(exp_dev), t
+
+
+def test_select_clients_device_rejects_p_gt_m():
+    with pytest.raises(ValueError, match="cannot select"):
+        select_clients_device(jax.random.PRNGKey(0), jnp.zeros(3), 0.5, 4)
+
+
+# ---------------------------------------------------------------------------
+# device store + chunk schedules ≡ build_cohort_plan
+# ---------------------------------------------------------------------------
+def test_device_store_gather_matches_cohort_plan(tiny_fed):
+    """Gathering a round's cohort from the device store via the chunk
+    schedule reproduces build_cohort_plan's padded arrays exactly."""
+    ds, _ = tiny_fed
+    store = DeviceClientStore.from_dataset(ds)
+    seed, t, batch = 0, 5, 16
+    ids = [1, 4, 6]
+    epochs_sel = [2, 1, 2]
+    plan = build_cohort_plan(
+        [ds.client_data(c) for c in ids], epochs_sel, batch,
+        [client_batch_rng(seed, t, c) for c in ids],
+    )
+    # schedule built for ALL clients at the chunk level
+    epochs_all = np.ones((1, store.num_clients), np.int32)
+    for c, e in zip(ids, epochs_sel):
+        epochs_all[0, c] = e
+    sched = build_chunk_schedule(
+        store.sizes_host, epochs_all, batch, t,
+        lambda tt, cid: client_batch_rng(seed, tt, cid),
+    )
+    x, y, sw, sv = store.gather_cohort(
+        jnp.asarray(ids),
+        jnp.asarray(sched.batch_idx[0]),
+        jnp.asarray(sched.sample_w[0]),
+        jnp.asarray(sched.step_valid[0]),
+    )
+    s = plan.num_steps
+    assert sched.num_steps >= s
+    np.testing.assert_array_equal(np.asarray(sw)[:, :s], plan.sample_w)
+    np.testing.assert_array_equal(np.asarray(sv)[:, :s], plan.step_valid)
+    assert not np.any(np.asarray(sv)[:, s:])
+    # real samples equal; padded slots are weight-0 (values irrelevant)
+    real = plan.sample_w > 0
+    np.testing.assert_array_equal(np.asarray(x)[:, :s][real], plan.x[real])
+    np.testing.assert_array_equal(np.asarray(y)[:, :s][real], plan.y[real])
+
+
+def test_device_store_shapes_and_sizes(tiny_fed):
+    ds, _ = tiny_fed
+    store = DeviceClientStore.from_dataset(ds)
+    sizes = ds.client_sizes()
+    assert store.num_clients == 8
+    assert np.array_equal(store.sizes_host, sizes)
+    assert store.x.shape == (8, int(sizes.max()), ds.x.shape[1])
+    for k in range(8):
+        xk, yk = ds.client_data(k)
+        np.testing.assert_array_equal(np.asarray(store.x[k, : len(xk)]), xk)
+        np.testing.assert_array_equal(np.asarray(store.y[k, : len(yk)]), yk)
