@@ -3,6 +3,15 @@
 Claim validated (C1/C2): FLrce reaches higher accuracy per round than the
 efficiency baselines under Dir(0.1) non-iid data, and the ES arm stops at a
 fraction of T with near-equal accuracy.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.fig10_table3                   # ~2-4 min CPU
+    REPRO_BENCH_SCALE=paper PYTHONPATH=src python -m benchmarks.fig10_table3   # ~1-2 h
+    REPRO_BENCH_DRIVER=scan PYTHONPATH=src python -m benchmarks.fig10_table3   # compiled rounds
+
+Runs all eight strategies (each run is shared with the other figure
+benchmarks via ``benchmarks.common``); under ``REPRO_BENCH_DRIVER=scan``
+every strategy except PyramidFL executes as compiled round chunks.
 """
 from __future__ import annotations
 

@@ -3,6 +3,14 @@
 
 Claim validated (C3a): FLrce has the lowest energy and >=30 % higher relative
 computation efficiency than every baseline.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.fig11_12        # ~2-4 min CPU (cached
+    # after any other figure benchmark ran in the same process/run.py sweep)
+
+``REPRO_BENCH_SCALE=paper`` for the full M=100 configuration (~1-2 h);
+``REPRO_BENCH_DRIVER=scan`` runs every strategy (except PyramidFL, which
+falls back) through the compiled scan driver — see benchmarks/common.py.
 """
 from __future__ import annotations
 

@@ -3,6 +3,14 @@ efficiency (Eq. 9, normalized).
 
 Claim validated (C3b): FLrce has (near-)lowest bandwidth usage and >=43 %
 higher relative communication efficiency than every baseline.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.fig13_14        # ~2-4 min CPU (cached
+    # after any other figure benchmark ran in the same process/run.py sweep)
+
+``REPRO_BENCH_SCALE=paper`` for the full configuration (~1-2 h);
+``REPRO_BENCH_DRIVER=scan`` for compiled round chunks (all strategies but
+PyramidFL) — see benchmarks/common.py.
 """
 from __future__ import annotations
 

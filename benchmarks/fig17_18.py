@@ -3,6 +3,14 @@
 Claim validated (C2): ES cuts the resource bill roughly in proportion to the
 saved rounds at marginal accuracy cost (the w/o-ES arm's efficiency is a
 fraction of FLrce's).
+
+Run:
+    PYTHONPATH=src python -m benchmarks.fig17_18        # ~1-2 min CPU (only
+    # the two FLrce arms run; cached across figure benchmarks)
+
+``REPRO_BENCH_SCALE=paper`` for the full configuration;
+``REPRO_BENCH_DRIVER=scan`` compiles both arms (FLrce supports the scan
+driver end-to-end, device-side Alg. 2 selection included).
 """
 from __future__ import annotations
 

@@ -3,6 +3,15 @@
 Reads results/dryrun/*.json produced by ``python -m repro.launch.dryrun`` and
 prints one row per (arch x shape x mesh): the three roofline terms, the
 dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # once, ~minutes
+    PYTHONPATH=src python -m benchmarks.roofline        # seconds (reads JSON)
+
+Unlike the fig/table benchmarks this reproduces no single paper figure; it
+is the scale-out companion (DESIGN.md §5/§6): per-architecture compute /
+memory / collective roofline terms for the sharded engine's mesh configs.
+The drivers are irrelevant here — no federated rounds execute.
 """
 from __future__ import annotations
 

@@ -2,6 +2,14 @@
 
 Claim validated (C4): small psi stops too early at low accuracy; large psi
 fails to trigger before T; psi ~ P/2 maximizes efficiency.
+
+Run:
+    PYTHONPATH=src python -m benchmarks.table4          # ~3-6 min CPU (six
+    # FLrce runs, one per psi; each cached for the session)
+
+``REPRO_BENCH_SCALE=paper`` for the full configuration;
+``REPRO_BENCH_DRIVER=scan`` runs every psi sweep point through the compiled
+scan driver (the Alg. 3 stop decision fires inside the chunk).
 """
 from __future__ import annotations
 

@@ -5,6 +5,12 @@ elements; masked entries are neither trained nor transmitted, so both
 directions of communication scale with ``keep_rate``.  Computation is NOT
 reduced (paper §4.5.3: width-wise dropout does not shorten the backward
 graph), which our ledger reproduces with ``compute_fraction=1.0``.
+
+Masks are a PURE function of ``(seed, t, cid)`` (an independent fold-in
+stream per pair, like ``client_batch_rng``), never of call order or
+selection history — that is what lets the scan driver precompute a chunk's
+selected-cohort mask rows into the compiled program and still agree
+bit-for-bit with the loop drivers (``supports_scan = True``).
 """
 from __future__ import annotations
 
@@ -14,18 +20,23 @@ import numpy as np
 
 from repro.fl.strategy import LocalConfig, Strategy
 
+_MASK_STREAM = 0x6D61736B  # 'mask': domain-separates from client_batch_rng
+
 
 class Dropout(Strategy):
     name = "dropout"
+    # pure (t, cid) masks + base host-RNG selection: the scan driver
+    # precomputes the selected cohort's masks per chunk
+    supports_scan = True
 
     def __init__(self, *args, keep_rate: float = 0.5, **kwargs):
         super().__init__(*args, **kwargs)
         self.keep_rate = keep_rate
-        self._mask_seed = 0
 
-    def client_config(self, t: int, cid: int, global_params) -> LocalConfig:
-        self._mask_seed += 1
-        rng = np.random.default_rng(hash((self._mask_seed, cid, t)) % (2**32))
+    def local_mask(self, t: int, cid: int, template):
+        """The (t, cid) sub-model mask, materialized over ``template``."""
+        entropy = [int(self.seed) & 0xFFFFFFFFFFFFFFFF, int(t), int(cid), _MASK_STREAM]
+        rng = np.random.default_rng(np.random.SeedSequence(entropy))
 
         def leaf_mask(leaf):
             if leaf.ndim < 2:  # keep biases/norms intact (they're cheap)
@@ -33,7 +44,10 @@ class Dropout(Strategy):
             m = rng.random(leaf.shape) < self.keep_rate
             return jnp.asarray(m, leaf.dtype)
 
-        mask = jax.tree_util.tree_map(leaf_mask, global_params)
+        return jax.tree_util.tree_map(leaf_mask, template)
+
+    def client_config(self, t: int, cid: int, global_params) -> LocalConfig:
+        mask = None if global_params is None else self.local_mask(t, cid, global_params)
         return LocalConfig(
             epochs=self.epochs,
             mask=mask,

@@ -5,24 +5,40 @@ paper groups with Fedcom).
 Per-leaf symmetric quantization: q = round(u / scale) with
 scale = max|u| / 127; upload = int8 payload + one fp32 scale per leaf
 (=> upload fraction ~= 0.25).
+
+A degenerate leaf — all-zero (scale = 0), or containing inf/nan (scale is
+non-finite) — quantizes to EXACTLY zero: there is no representable payload
+for it, and the old pass-through behavior either shipped the leaf
+unquantized or poisoned the dequantized update with NaNs (0 · inf).
+
+The quantizer is a device-resident :meth:`Strategy.update_transform`: one
+jitted ``jax.random``-based pass over the cohort's flat ``(P, D)`` update
+matrix, with per-leaf scales read off static leaf offsets from the params
+template and stochastic-rounding keys folded from ``(seed, t, cid, leaf)`` —
+deterministic across engines and drivers, so the batched loop and the
+compiled scan chunk produce bit-identical quantized updates
+(``supports_scan = True``).  :func:`quantize_dequantize` is kept as the host
+NumPy reference the device path is regression-tested against.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.strategy import Strategy
+from repro.fl.strategy import LocalConfig, Strategy
 
 
 def quantize_dequantize(u: jax.Array, rng: np.random.Generator, bits: int = 8) -> jax.Array:
+    """Host reference: stochastic uniform quantize-dequantize of one leaf."""
     levels = 2 ** (bits - 1) - 1
     arr = np.asarray(u, np.float32)
-    scale = np.max(np.abs(arr)) / levels if arr.size else 1.0
-    if scale <= 0:
-        return u
+    scale = np.max(np.abs(arr)) / levels if arr.size else 0.0
+    if not np.isfinite(scale) or scale <= 0:
+        # degenerate leaf: all-zero, or inf/nan-containing — quantizes to 0
+        return jnp.zeros_like(u)
     scaled = arr / scale
     floor = np.floor(scaled)
     frac = scaled - floor
@@ -33,12 +49,48 @@ def quantize_dequantize(u: jax.Array, rng: np.random.Generator, bits: int = 8) -
 
 class QuantizedFL(Strategy):
     name = "quantized8"
+    # pure configs + a pure device transform: the whole round compiles
+    supports_scan = True
 
     def __init__(self, *args, bits: int = 8, **kwargs):
         super().__init__(*args, **kwargs)
         self.bits = bits
 
-    def process_update(self, cid: int, update) -> Tuple[object, float]:
-        rng = np.random.default_rng(hash((cid, self.bits)) % (2**32))
-        out = jax.tree_util.tree_map(lambda l: quantize_dequantize(l, rng, self.bits), update)
-        return out, self.bits / 32.0
+    def client_config(self, t: int, cid: int, global_params) -> LocalConfig:
+        # int8 payload + one fp32 scale per leaf (scales are O(leaves) ≪ D)
+        return LocalConfig(epochs=self.epochs, upload_fraction=self.bits / 32.0)
+
+    def update_transform(self, template) -> Callable:
+        levels = 2 ** (self.bits - 1) - 1
+        sizes = [int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(template)]
+        offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        d = int(offsets[-1])
+        base_key = jax.random.PRNGKey(self.seed)
+
+        def quant_leaf(key: jax.Array, seg: jax.Array) -> jax.Array:
+            scale = jnp.max(jnp.abs(seg)) / levels
+            ok = jnp.isfinite(scale) & (scale > 0.0)
+            safe = jnp.where(ok, scale, 1.0)
+            scaled = seg / safe
+            floor = jnp.floor(scaled)
+            frac = scaled - floor
+            q = floor + (jax.random.uniform(key, seg.shape) < frac)
+            q = jnp.clip(q, -levels - 1, levels)
+            return jnp.where(ok, q * safe, 0.0)
+
+        def apply(t: jax.Array, ids: jax.Array, u: jax.Array) -> jax.Array:
+            key_t = jax.random.fold_in(base_key, t)
+            keys = jax.vmap(lambda cid: jax.random.fold_in(key_t, cid))(ids)
+            segs = []
+            for i, (lo, hi) in enumerate(zip(offsets[:-1], offsets[1:])):
+                if hi == lo:   # zero-size leaf: nothing to quantize (the host
+                    segs.append(u[:, lo:hi])   # reference returns it empty too)
+                    continue
+                leaf_keys = jax.vmap(lambda k: jax.random.fold_in(k, i))(keys)
+                segs.append(jax.vmap(quant_leaf)(leaf_keys, u[:, lo:hi]))
+            out = jnp.concatenate(segs, axis=1).astype(u.dtype)
+            if u.shape[1] > d:   # sharded engines zero-pad D; keep the tail
+                out = jnp.concatenate([out, u[:, d:]], axis=1)
+            return out
+
+        return apply

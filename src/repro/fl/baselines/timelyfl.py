@@ -14,6 +14,10 @@ from repro.fl.strategy import LocalConfig, Strategy
 
 class TimelyFL(Strategy):
     name = "timelyfl"
+    # capabilities are drawn once in __init__, so client_config is a pure
+    # function of cid and the scan driver precomputes each chunk's per-leaf
+    # freeze flags alongside the host-drawn selections
+    supports_scan = True
 
     def __init__(self, *args, min_capability: float = 0.3, epoch_fraction: float = 0.6, **kwargs):
         super().__init__(*args, **kwargs)

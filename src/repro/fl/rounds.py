@@ -33,7 +33,12 @@ executes:
 * ``driver="scan"`` — whole chunks of rounds compile into one ``lax.scan``
   program over a device-resident carry; the host syncs once per chunk
   (``repro.fl.scan_driver``).  Requires ``engine="batched"`` and a strategy
-  with ``supports_scan``; other strategies fall back to the batched loop.
+  with ``supports_scan`` — FLrce and every §4.1 baseline except PyramidFL
+  (whose selection depends on round results); see docs/support-matrix.md.
+
+Update post-processing (Fedcom top-k, QuantizedFL int8) is a device-resident
+``Strategy.update_transform`` applied to the round's flat (P, D) update
+matrix by every engine — per-client updates never bounce through host NumPy.
 """
 from __future__ import annotations
 
@@ -234,12 +239,17 @@ def run_federated(
                 seed=seed, init_params=init_params, verbose=verbose,
                 chunk_rounds=scan_chunk_rounds,
             )
-        # host-side per-round logic (compression, masks): fall back to the
-        # batched loop, which handles every strategy
+        # host-coupled per-round logic (PyramidFL's loss-driven selection):
+        # fall back to the batched loop, which handles every strategy
         if verbose:
             print(f"[{strategy.name}] no scan support; falling back to engine='batched'")
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
+    # the strategy's device-resident update post-processing stage (Fedcom
+    # top-k, QuantizedFL int8); jitted once, applied to the round's flat
+    # (P, D) buffer by every engine
+    transform = strategy.update_transform(params)
+    apply_transform = jax.jit(transform) if transform is not None else None
     trainer: Any
     shard_vec = None
     if engine == "sequential":
@@ -286,12 +296,7 @@ def run_federated(
 
         if engine == "sequential":
             updates, stats = _sequential_round(trainer, params, dataset, ids, cfgs, rngs)
-            processed_cols, upload_fracs = [], []
-            for cid, cfg, update in zip(ids, cfgs, updates):
-                processed, proc_frac = strategy.process_update(int(cid), update)
-                processed_cols.append(_flatten_update(processed))
-                upload_fracs.append(min(proc_frac, cfg.upload_fraction))
-            update_matrix = jnp.stack(processed_cols)
+            update_matrix = jnp.stack([_flatten_update(u) for u in updates])
         else:
             plan = build_cohort_plan(
                 [dataset.client_data(int(cid)) for cid in ids],
@@ -299,36 +304,31 @@ def run_federated(
                 batch_size,
                 rngs,
             )
-            stacked, update_matrix, stats = trainer.train_cohort(
+            _, update_matrix, stats = trainer.train_cohort(
                 params,
                 plan,
                 prox_mus=[cfg.prox_mu for cfg in cfgs],
                 masks=[cfg.mask for cfg in cfgs],
                 freeze_fracs=[cfg.freeze_frac for cfg in cfgs],
             )
-            if strategy.processes_updates:
-                # compression strategies transform per-client pytrees on host
-                processed_cols, upload_fracs = [], []
-                for pos, (cid, cfg) in enumerate(zip(ids, cfgs)):
-                    u_k = jax.tree_util.tree_map(lambda l: l[pos], stacked)
-                    processed, proc_frac = strategy.process_update(int(cid), u_k)
-                    processed_cols.append(_flatten_update(processed))
-                    upload_fracs.append(min(proc_frac, cfg.upload_fraction))
-                update_matrix = jnp.stack(processed_cols)
-                if engine == "sharded":
-                    # host-processed columns go back to the mesh layout
-                    update_matrix = trainer.shard_updates(update_matrix, len(ids))
-            else:
-                upload_fracs = [cfg.upload_fraction for cfg in cfgs]
 
-        # --- resource accounting -------------------------------------------
-        for cid, cfg, frac in zip(ids, cfgs, upload_fracs):
+        # --- device-resident update transform (compression) -----------------
+        if apply_transform is not None:
+            update_matrix = apply_transform(
+                jnp.int32(t), jnp.asarray(ids, jnp.int32), update_matrix
+            )
+            if engine == "sharded":
+                # restore the D-sharded round-buffer layout
+                update_matrix = trainer.shard_updates(update_matrix, len(ids))
+
+        # --- resource accounting (fractions are static per-config metadata) -
+        for cid, cfg in zip(ids, cfgs):
             flops = (
                 model.flops_per_sample() * int(sizes[int(cid)]) * cfg.epochs * cfg.compute_fraction
             )
             ledger.charge_training(flops)
             ledger.charge_download(n_params, cfg.download_fraction)
-            ledger.charge_upload(n_params, frac)
+            ledger.charge_upload(n_params, cfg.upload_fraction)
 
         # --- Eq. 4 aggregation from the shared flat buffer ------------------
         weights = jnp.asarray(aggregation_weights(sizes[ids]), jnp.float32)

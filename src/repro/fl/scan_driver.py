@@ -17,20 +17,25 @@ models — that dispatch overhead dominates.  This driver removes it:
 Numerics match the batched loop driver within fp32 tolerance: batch
 schedules come from the identical ``client_batch_rng`` fold-in streams
 (host-drawn per chunk, gathered on device), selection consumes the same PRNG
-key sequence with the same tie-breaks (``select_clients_device``), and the
-round body reuses ``BatchedCohortTrainer``'s cohort program.  After an early
-stop fires mid-chunk the remaining scan iterations still execute (a scan has
-no early exit) but their carry writes are masked out, so the final state is
-the stop round's — the wasted rounds are bounded by ``chunk_rounds``.
+key sequence with the same tie-breaks (``select_clients_device``), the round
+body reuses ``BatchedCohortTrainer``'s cohort program, and the strategy's
+device-resident ``update_transform`` (Fedcom top-k, QuantizedFL int8) is
+traced straight into the chunk.  Dropout masks and TimelyFL freeze flags are
+host-materialized per chunk for the (host-precomputed) selected cohorts and
+ride into the scan as stacked per-round inputs.  After an early stop fires
+mid-chunk the remaining scan iterations still execute (a scan has no early
+exit) but their carry writes are masked out, so the final state is the stop
+round's — the wasted rounds are bounded by ``chunk_rounds``.
 
-Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()``;
-``run_federated`` falls back to the batched loop for the rest (host-side
-compression, per-round masks).
+Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()`` — FLrce
+and every §4.1 baseline except PyramidFL, whose loss-driven selection/epoch
+plan cannot be precomputed; ``run_federated`` falls back to the batched loop
+for those (docs/support-matrix.md tabulates the full picture).
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +44,12 @@ import numpy as np
 from repro.core.distributed import flatten_pytree
 from repro.data.device import DeviceClientStore, build_chunk_schedule
 from repro.data.synthetic import FederatedDataset
-from repro.fl.client import BatchedCohortTrainer, client_batch_rng
+from repro.fl.client import (
+    BatchedCohortTrainer,
+    client_batch_rng,
+    stack_freeze_flags,
+    stack_variant_trees,
+)
 from repro.fl.metrics import ResourceLedger
 from repro.fl.strategy import Strategy
 from repro.models.cnn import param_count
@@ -58,36 +68,32 @@ class _ChunkRunner:
     """Builds and caches the jitted chunk program for one FL job."""
 
     def __init__(self, model, store: DeviceClientStore, unflatten, program,
-                 *, learning_rate: float, batch_size: int, clients_per_round: int,
-                 eval_every: int, max_rounds: int, eval_x, eval_y):
+                 transform, *, learning_rate: float, batch_size: int,
+                 clients_per_round: int, eval_every: int, max_rounds: int,
+                 eval_x, eval_y):
         self.model = model
         self.store = store
         self.unflatten = unflatten
         self.program = program
+        self.transform = transform
         self.p = clients_per_round
         self.eval_every = eval_every
         self.max_rounds = max_rounds
         self.eval_x, self.eval_y = eval_x, eval_y
         self._trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
         self._train_raw = self._trainer._make_train()
-        self._cache: Dict[bool, Any] = {}
+        self._cache: Dict[Tuple[bool, bool], Any] = {}
 
-    def _freeze_ones(self, params: PyTree) -> PyTree:
-        # all-trainable cohort: the (P,)-stacked per-leaf flags are all 1.0
-        return jax.tree_util.tree_map(
-            lambda _: jnp.ones((self.p,), jnp.float32), params
-        )
-
-    def _build(self, use_prox: bool):
+    def _build(self, use_prox: bool, has_mask: bool):
         store, program, unflatten = self.store, self.program, self.unflatten
-        train, p = self._train_raw, self.p
+        train, p, transform = self._train_raw, self.p, self.transform
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
         sizes_f = store.sizes.astype(jnp.float32)
 
         def body(carry, x_t):
-            w, sc, stopped, last_acc, freeze = carry
-            t, phi, host_ids, bi_t, sw_t, sv_t, prox_t = x_t
+            w, sc, stopped, last_acc = carry
+            t, phi, host_ids, bi_t, sw_t, sv_t, prox_t, mask_t, freeze_t = x_t
             params_t = unflatten(w)
 
             # --- Alg. 2 selection (device) or host-precomputed ids ----------
@@ -100,9 +106,13 @@ class _ChunkRunner:
             x, y, sw, sv = store.gather_cohort(ids, bi_t, sw_t, sv_t)
             mu = prox_t[ids]
             _, flat, losses = train(
-                params_t, x, y, sw, sv, {}, freeze, mu,
-                use_prox=use_prox, has_mask=False,
+                params_t, x, y, sw, sv, mask_t, freeze_t, mu,
+                use_prox=use_prox, has_mask=has_mask,
             )
+
+            # --- device-resident update transform (compression) -------------
+            if transform is not None:
+                flat = transform(t, ids, flat)
 
             # --- Eq. 4 aggregation from the flat buffer ---------------------
             sel_sizes = sizes_f[ids]
@@ -138,7 +148,7 @@ class _ChunkRunner:
 
             # rounds after a stop still execute (scan has no early exit) but
             # never touch the carry: the final state is the stop round's
-            new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc, freeze)
+            new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc)
             carry_out = _tree_where(stopped, carry, new_carry)
             out = {
                 "ids": ids,
@@ -151,18 +161,18 @@ class _ChunkRunner:
             }
             return carry_out, out
 
-        def chunk(w, sc, last_acc, freeze, xs):
-            carry0 = (w, sc, jnp.asarray(False), last_acc, freeze)
-            (w, sc, stopped, last_acc, _), outs = jax.lax.scan(body, carry0, xs)
+        def chunk(w, sc, last_acc, xs):
+            carry0 = (w, sc, jnp.asarray(False), last_acc)
+            (w, sc, stopped, last_acc), outs = jax.lax.scan(body, carry0, xs)
             return w, sc, last_acc, outs
 
         return jax.jit(chunk)
 
-    def run_chunk(self, w, sc, last_acc, params_template, xs, use_prox: bool):
-        if use_prox not in self._cache:
-            self._cache[use_prox] = self._build(use_prox)
-        freeze = self._freeze_ones(params_template)
-        return self._cache[use_prox](w, sc, last_acc, freeze, xs)
+    def run_chunk(self, w, sc, last_acc, xs, use_prox: bool, has_mask: bool):
+        key = (use_prox, has_mask)
+        if key not in self._cache:
+            self._cache[key] = self._build(use_prox, has_mask)
+        return self._cache[key](w, sc, last_acc, xs)
 
 
 def run_scan_driver(
@@ -201,8 +211,11 @@ def run_scan_driver(
     store = DeviceClientStore.from_dataset(dataset)
     m = store.num_clients
     ledger = ResourceLedger(device=device)
+    # the strategy's device-resident update post-processing (Fedcom top-k,
+    # QuantizedFL int8) traces straight into the compiled chunk
+    transform = strategy.update_transform(params)
     runner = _ChunkRunner(
-        model, store, unflatten, program,
+        model, store, unflatten, program, transform,
         learning_rate=learning_rate, batch_size=batch_size,
         clients_per_round=strategy.p, eval_every=eval_every,
         max_rounds=max_rounds,
@@ -220,15 +233,17 @@ def run_scan_driver(
         ts = list(range(t0, t0 + r))
 
         # per-(round, client) local configs: epochs/prox enter the compiled
-        # chunk; the ledger fractions are reused host-side at flush.
+        # chunk; the ledger fractions are reused host-side at flush.  The
+        # None template means metadata-only (no mask materialization for all
+        # M clients) — client_config purity makes the forms interchangeable.
         cfg_grid = [[strategy.client_config(t, cid, None) for cid in range(m)] for t in ts]
         for row in cfg_grid:
             for cfg in row:
-                if cfg.mask is not None or cfg.freeze_frac:
+                if cfg.mask is not None:
                     raise ValueError(
-                        f"{strategy.name} declares supports_scan but returns "
-                        "mask/freeze_frac configs, which cannot enter the "
-                        "compiled chunk"
+                        f"{strategy.name} materialized a mask from "
+                        "client_config(t, cid, None); with a None template "
+                        "the config must be metadata-only"
                     )
         epochs = np.asarray([[cfg.epochs for cfg in row] for row in cfg_grid], np.int32)
         prox = np.asarray([[cfg.prox_mu for cfg in row] for row in cfg_grid], np.float32)
@@ -242,9 +257,58 @@ def run_scan_driver(
         if program.select is None:
             host_ids = np.stack([np.asarray(strategy.select(t)) for t in ts]).astype(np.int32)
             phis = np.zeros(r, np.float32)
+            # the selected cohorts are known, so per-round masks (Dropout)
+            # and per-leaf freeze flags (TimelyFL) are materialized host-side
+            # — pure re-invocation with the shape template — and ride into
+            # the scan as stacked (R, P, ...) inputs
+            sel_cfgs = [
+                [strategy.client_config(t, int(cid), params) for cid in host_ids[i]]
+                for i, t in enumerate(ts)
+            ]
+            mask_rounds = [
+                stack_variant_trees([c.mask for c in row], params) for row in sel_cfgs
+            ]
+            has_mask = any(flag for _, flag in mask_rounds)
+            if has_mask:
+                ones = jax.tree_util.tree_map(
+                    lambda l: jnp.ones((strategy.p,) + l.shape, l.dtype), params
+                )
+                mask_xs = jax.tree_util.tree_map(
+                    lambda *ls: jnp.stack(ls),
+                    *[mt if flag else ones for mt, flag in mask_rounds],
+                )
+            else:
+                mask_xs = {}
+            freeze_rounds = [
+                stack_freeze_flags(params, [c.freeze_frac for c in row])
+                for row in sel_cfgs
+            ]
         else:
+            # device-side selection: the cohort is unknown at chunk build, so
+            # per-round host-built variants cannot be gathered for it.  The
+            # mask check re-invokes client_config with the template for every
+            # (t, cid) — cheap for a legitimate device-select strategy (its
+            # configs are metadata-only), and the cost of a misuse is paid in
+            # an error, not silence.
+            if any(
+                cfg.freeze_frac for row in cfg_grid for cfg in row
+            ) or any(
+                strategy.client_config(t, cid, params).mask is not None
+                for t in ts for cid in range(m)
+            ):
+                raise ValueError(
+                    f"{strategy.name} uses device-side selection, so per-round "
+                    "masks/freeze flags cannot be precomputed for the selected "
+                    "cohort (host-precomputable selection is required)"
+                )
             host_ids = np.zeros((r, strategy.p), np.int32)
             phis = program.explore_phis(np.asarray(ts))
+            has_mask = False
+            mask_xs = {}
+            freeze_rounds = [
+                stack_freeze_flags(params, [0.0] * strategy.p) for _ in ts
+            ]
+        freeze_xs = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *freeze_rounds)
 
         xs = (
             jnp.arange(t0, t0 + r, dtype=jnp.int32),
@@ -254,8 +318,12 @@ def run_scan_driver(
             jnp.asarray(sched.sample_w),
             jnp.asarray(sched.step_valid),
             jnp.asarray(prox),
+            mask_xs,
+            freeze_xs,
         )
-        w, sc, last_acc, outs = runner.run_chunk(w, sc, last_acc, params, xs, use_prox)
+        w, sc, last_acc, outs = runner.run_chunk(
+            w, sc, last_acc, xs, use_prox, has_mask
+        )
         outs = jax.device_get(outs)            # the chunk's ONE host sync
 
         # --- host flush: ledger + RoundRecords + stop check -----------------

@@ -1,14 +1,18 @@
 """Strategy interface: what varies between FLrce and the baselines.
 
 A strategy controls (1) client selection, (2) the per-client local-training
-variant, (3) update post-processing (compression), (4) per-round bookkeeping
-and the stop decision, and (5) the communication/computation cost fractions
-used by the resource ledger.
+variant, (3) a device-resident update transform (compression), (4) per-round
+bookkeeping and the stop decision, and (5) the communication/computation cost
+fractions used by the resource ledger.
+
+See ``docs/writing-a-strategy.md`` for the authoring guide and
+``docs/support-matrix.md`` for which engine × driver combinations each
+shipped strategy runs on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -72,6 +76,7 @@ class Strategy:
         self.m = num_clients
         self.p = clients_per_round
         self.epochs = local_epochs
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
 
     # -- selection -----------------------------------------------------------
@@ -80,20 +85,49 @@ class Strategy:
 
     # -- local-training variant ----------------------------------------------
     def client_config(self, t: int, cid: int, global_params: PyTree) -> LocalConfig:
+        """Per-(round, client) local-training metadata + ledger fractions.
+
+        Must be a PURE function of ``(t, cid)``: no RNG side effects, no
+        mutable state, and every field except ``mask`` independent of
+        ``global_params``.  ``global_params`` is only a shape template for
+        materializing ``mask``; with ``global_params=None`` a strategy must
+        return the identical config with ``mask=None`` (the scan driver uses
+        the None form to read epochs/fractions for ALL clients cheaply, then
+        re-invokes with the template for the selected cohort only).
+        """
         return LocalConfig(epochs=self.epochs)
 
-    # -- update post-processing (compression etc.) ----------------------------
-    def process_update(self, cid: int, update: PyTree) -> Tuple[PyTree, float]:
-        """Returns (possibly compressed update, upload byte fraction)."""
-        return update, 1.0
+    # -- device-resident update transform (compression etc.) ------------------
+    def update_transform(self, template: PyTree) -> Optional[Callable]:
+        """The strategy's update post-processing stage, run ON DEVICE.
+
+        Returns ``None`` (identity — no transform stage is traced) or a pure,
+        jit-traceable function ``apply(t, ids, u) -> u'`` where ``t`` is the
+        round index (scalar int32, possibly traced), ``ids`` the selected
+        client ids (``(P,)`` int32, possibly traced) and ``u`` the flat
+        ``(P, D')`` fp32 update matrix in :func:`flatten_pytree` leaf order.
+        ``template`` is the global-params pytree — static leaf shapes/offsets
+        (e.g. per-leaf quantization scales) must be baked in from it at build
+        time, never recomputed from traced values.
+
+        Contract: ``apply`` is called once per round by every engine
+        (sequential/batched/sharded) and traced into the compiled chunk by
+        the scan driver, so it must be deterministic given ``(t, ids, u)`` —
+        randomness comes from ``jax.random`` keys folded from the strategy
+        seed and ``(t, cid)``, never from host RNG state.  ``D'`` may exceed
+        the template's flat dim D (the sharded engine zero-pads D to the
+        shard count); columns beyond D are zero and must stay zero.  The
+        corresponding upload byte fraction is static per ``(t, cid)`` and is
+        reported via :meth:`client_config`'s ``upload_fraction``, which keeps
+        ledger accounting identical across engines and drivers.
+        """
+        return None
 
     @property
-    def processes_updates(self) -> bool:
-        """True ⇒ process_update is overridden (compression etc.); the batched
-        engine then materializes per-client pytrees for it instead of using
-        the device-resident flat update matrix directly.  Derived, so a new
-        compression strategy cannot silently skip its own processing."""
-        return type(self).process_update is not Strategy.process_update
+    def transforms_updates(self) -> bool:
+        """True ⇒ update_transform is overridden (compression etc.).  Derived,
+        so a new compression strategy cannot silently skip its own stage."""
+        return type(self).update_transform is not Strategy.update_transform
 
     # -- compiled (scan) driver contract --------------------------------------
     supports_scan: bool = False
@@ -101,18 +135,23 @@ class Strategy:
 
     Declaring support is a promise the scan driver relies on:
 
-    * ``client_config(t, cid, None)`` is pure (no RNG side effects),
-      independent of the global params, and returns neither ``mask`` nor
-      ``freeze_frac`` (per-round host-built pytrees cannot enter the
-      compiled chunk);
-    * ``process_update`` is the identity (``processes_updates`` is False);
+    * ``client_config(t, cid, global_params)`` is pure — see its docstring;
+      with ``global_params=None`` it returns the mask-free metadata form;
+    * ``update_transform`` (if any) is a pure traced function per its
+      contract, so it can be fused into the chunk program;
+    * dropout-style masks are allowed only together with host-precomputable
+      selection: the driver materializes the selected cohort's mask pytrees
+      per chunk and feeds them to the scan as stacked inputs, which requires
+      the chunk's ids ahead of time.  ``freeze_frac`` has the same
+      host-selection requirement (per-leaf flags are precomputed per round);
     * selection is either the base host-RNG draw (independent of round
       results, precomputable per chunk) or provided on device via
       :meth:`scan_program`.
 
-    Strategies with host-side per-round logic (compression, dropout masks,
-    layer freezing) keep the default False and fall back to the batched
-    loop driver.
+    Strategies whose host-side per-round logic cannot be precomputed — e.g.
+    PyramidFL, whose selection and epoch plan depend on the previous rounds'
+    observed losses — keep the default False and fall back to the batched
+    loop driver (see ``docs/support-matrix.md``).
     """
 
     def scan_program(self) -> ScanProgram:

@@ -1,0 +1,69 @@
+"""Engine × driver × strategy support matrix, rendered from code.
+
+``docs/support-matrix.md`` embeds the table this module renders between
+marker comments; ``tests/test_support_matrix.py`` re-renders it from the
+``Strategy`` class attributes (``name``, ``supports_scan``, the
+``update_transform`` override) and asserts the doc matches, so the doc can
+never silently drift from the code.  Regenerate with:
+
+    PYTHONPATH=src python -m repro.fl.support_matrix
+
+and paste the output between the markers (or just read the test failure
+diff).
+"""
+from __future__ import annotations
+
+from typing import List, Type
+
+from repro.fl.flrce import FLrce
+from repro.fl.baselines import (
+    Dropout,
+    FedAvg,
+    Fedcom,
+    Fedprox,
+    PyramidFL,
+    QuantizedFL,
+    TimelyFL,
+)
+from repro.fl.strategy import Strategy
+
+#: Row order of the rendered matrix: the paper's method first, then the
+#: §4.1 baselines in the order benchmarks/common.py sweeps them.
+STRATEGY_CLASSES: List[Type[Strategy]] = [
+    FLrce, FedAvg, Fedcom, Fedprox, Dropout, PyramidFL, QuantizedFL, TimelyFL,
+]
+
+BEGIN_MARKER = "<!-- BEGIN GENERATED MATRIX: python -m repro.fl.support_matrix -->"
+END_MARKER = "<!-- END GENERATED MATRIX -->"
+
+_HEADER = (
+    "| Strategy | `driver=\"loop\"` (sequential / batched / sharded) | "
+    "`driver=\"scan\"` (engine=batched) | Device update transform |\n"
+    "| --- | --- | --- | --- |"
+)
+
+
+def _scan_cell(cls: Type[Strategy]) -> str:
+    return "compiled" if cls.supports_scan else "falls back to batched loop"
+
+
+def _transform_cell(cls: Type[Strategy]) -> str:
+    return "yes" if cls.update_transform is not Strategy.update_transform else "—"
+
+
+def render_support_matrix() -> str:
+    """The markdown table embedded in docs/support-matrix.md."""
+    rows = [_HEADER]
+    for cls in STRATEGY_CLASSES:
+        rows.append(
+            f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | {_transform_cell(cls)} |"
+        )
+    return "\n".join(rows)
+
+
+def scan_capable_names() -> List[str]:
+    return [cls.name for cls in STRATEGY_CLASSES if cls.supports_scan]
+
+
+if __name__ == "__main__":
+    print(render_support_matrix())

@@ -50,6 +50,14 @@ def topk_mask(
     )
 
 
+def topk_mask_rows(
+    u: jax.Array, *, keep_frac: float = 0.1, block_d: int = _topk_mask.DEFAULT_BLOCK_D
+) -> jax.Array:
+    return _topk_mask.topk_mask_rows(
+        u, keep_frac=keep_frac, block_d=block_d, interpret=_interpret()
+    )
+
+
 def decode_attention(
     q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, length: jax.Array,
     *, block_s: int = _decode_attention.DEFAULT_BLOCK_S,

@@ -35,6 +35,43 @@ def _topk_mask_kernel(u_ref, out_ref, *, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("keep_frac", "block_d", "interpret"))
+def topk_mask_rows(
+    u: jax.Array,
+    *,
+    keep_frac: float = 0.1,
+    block_d: int = DEFAULT_BLOCK_D,
+    interpret: bool = True,
+) -> jax.Array:
+    """Row-wise block-local top-k of a ``(P, D)`` matrix.
+
+    Each row is sparsified independently with the same block boundaries the
+    1-D :func:`topk_mask` uses (the grid simply adds a row axis), so a row of
+    the output is bitwise the 1-D kernel applied to that row.  This is the
+    cohort form Fedcom's device-resident update transform vmaps over: the
+    whole ``(P, D)`` update matrix is masked in one kernel launch instead of
+    P host round-trips.
+    """
+    if not 0.0 < keep_frac <= 1.0:
+        raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
+    p, d = u.shape
+    pad = (-d) % block_d
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad)))
+    dp = d + pad
+    k = max(1, int(-(-keep_frac * block_d // 1)))  # ceil
+    out = pl.pallas_call(
+        functools.partial(_topk_mask_kernel, k=k),
+        grid=(p, dp // block_d),
+        in_specs=[pl.BlockSpec((1, block_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, dp), u.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary", "arbitrary")),
+    )(u)
+    return out[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("keep_frac", "block_d", "interpret"))
 def topk_mask(
     u: jax.Array,
     *,
@@ -43,23 +80,6 @@ def topk_mask(
     interpret: bool = True,
 ) -> jax.Array:
     """Keep the block-local top ``ceil(keep_frac*block_d)`` magnitudes of (D,)."""
-    if not 0.0 < keep_frac <= 1.0:
-        raise ValueError(f"keep_frac must be in (0, 1], got {keep_frac}")
-    (d,) = u.shape
-    pad = (-d) % block_d
-    if pad:
-        u = jnp.pad(u, (0, pad))
-    dp = d + pad
-    k = max(1, int(-(-keep_frac * block_d // 1)))  # ceil
-    import functools as _ft
-
-    out = pl.pallas_call(
-        _ft.partial(_topk_mask_kernel, k=k),
-        grid=(dp // block_d,),
-        in_specs=[pl.BlockSpec((1, block_d), lambda i: (0, i))],
-        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, dp), u.dtype),
-        interpret=interpret,
-        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
-    )(u.reshape(1, dp))
-    return out[0, :d]
+    return topk_mask_rows(
+        u[None, :], keep_frac=keep_frac, block_d=block_d, interpret=interpret
+    )[0]

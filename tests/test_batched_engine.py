@@ -74,8 +74,10 @@ def test_engines_match_per_variant(tiny_fed, cls, kw):
     (QuantizedFL, {}),
 ])
 def test_compression_strategies_through_batched_engine(tiny_fed, cls, kw):
-    """processes_updates strategies route per-client pytrees through
-    process_update; both engines must agree on bytes and results."""
+    """transforms_updates strategies apply the same device-resident
+    update_transform to the round's flat (P, D) matrix in every engine
+    (keys folded from (seed, t, cid), so sequential and batched quantize
+    identically); both engines must agree on bytes and results."""
     ds, model = tiny_fed
     seq, bat = _run_both(
         model, ds, lambda: cls(8, 3, 1, seed=0, **kw),

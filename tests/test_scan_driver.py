@@ -3,9 +3,10 @@
 ``driver="scan"`` compiles whole round chunks into one ``lax.scan`` program;
 it must reproduce the batched loop driver within fp32 tolerance — identical
 selection sequences, exploited flags, stop rounds and evaluation schedule,
-matching accuracies/losses — across FLrce, FedAvg and Fedprox, for every
-chunk/round-count alignment, with strategies lacking scan support falling
-back to the batched loop.
+matching accuracies/losses, bitwise-equal ledger charges — across FLrce and
+every §4.1 baseline (compression transforms, dropout masks and freeze flags
+included), for every chunk/round-count alignment, with the one strategy
+lacking scan support (PyramidFL) falling back to the batched loop.
 """
 import dataclasses
 
@@ -17,7 +18,9 @@ import pytest
 from repro.core.selection import explore_probability, select_clients, select_clients_device
 from repro.data import DeviceClientStore, build_chunk_schedule, make_federated_classification
 from repro.fl import FLrce, run_federated
-from repro.fl.baselines import FedAvg, Fedcom, Fedprox
+from repro.fl.baselines import (
+    Dropout, FedAvg, Fedcom, Fedprox, PyramidFL, QuantizedFL, TimelyFL,
+)
 from repro.fl.client import build_cohort_plan, client_batch_rng
 from repro.models.cnn import MLPClassifier, param_count
 
@@ -65,6 +68,10 @@ def _assert_records_match(bat, scn):
 @pytest.mark.parametrize("cls,kw", [
     (FedAvg, {}),
     (Fedprox, {"mu": 0.01}),
+    (Fedcom, {"keep_frac": 0.2}),        # device top-k update transform
+    (QuantizedFL, {}),                   # device int8 update transform
+    (Dropout, {"keep_rate": 0.6}),       # per-(t, cid) masks into the chunk
+    (TimelyFL, {}),                      # per-leaf freeze flags into the chunk
 ])
 def test_scan_matches_batched_host_selected(tiny_fed, cls, kw):
     ds, model = tiny_fed
@@ -73,6 +80,35 @@ def test_scan_matches_batched_host_selected(tiny_fed, cls, kw):
         max_rounds=4, learning_rate=0.1, batch_size=16, seed=0,
     )
     _assert_records_match(bat, scn)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: FedAvg(8, 3, 1, seed=0),
+    lambda: Fedprox(8, 3, 2, seed=0, mu=0.01),
+    lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
+    lambda: QuantizedFL(8, 3, 1, seed=0),
+    lambda: Dropout(8, 3, 1, seed=0, keep_rate=0.5),
+    lambda: TimelyFL(8, 3, 1, seed=0),
+    lambda: PyramidFL(8, 3, 1, seed=0),  # falls back: charges must still match
+], ids=["fedavg", "fedprox", "fedcom", "quantized8", "dropout", "timelyfl",
+        "pyramidfl"])
+def test_scan_ledger_charges_equal_batched_per_round(tiny_fed, make):
+    """Eq. 8/9 depend on the resource ledger: the transform refactor must not
+    change accounting.  Per-round cumulative upload/download/compute charges
+    under driver='scan' equal the batched-loop charges EXACTLY (both drivers
+    charge the same pure host arithmetic over the same configs)."""
+    ds, model = tiny_fed
+    bat, scn = _run_both(
+        model, ds, make, max_rounds=4, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    assert [r.selected for r in bat.records] == [r.selected for r in scn.records]
+    for a, b in zip(bat.records, scn.records):
+        assert a.energy_kj == b.energy_kj, a.t
+        assert a.bytes_gb == b.bytes_gb, a.t
+    assert bat.ledger.bytes_up == scn.ledger.bytes_up
+    assert bat.ledger.bytes_down == scn.ledger.bytes_down
+    assert bat.ledger.energy_j == scn.ledger.energy_j
+    assert bat.ledger.rounds == scn.ledger.rounds
 
 
 def test_scan_matches_batched_flrce_full_loop(tiny_fed):
@@ -143,16 +179,41 @@ def test_scan_chunk_alignment_invariance(tiny_fed, chunk):
     _assert_records_match(ref, res)
 
 
-def test_scan_fallback_for_compression_strategies(tiny_fed):
-    """Fedcom has host-side per-round compression: driver='scan' silently
-    falls back to the batched loop and reproduces it exactly."""
+def test_scan_fallback_for_pyramidfl(tiny_fed):
+    """PyramidFL's selection/epoch plan depends on observed losses, so a
+    chunk cannot be precomputed: driver='scan' silently falls back to the
+    batched loop and reproduces it exactly."""
     ds, model = tiny_fed
-    assert not Fedcom(8, 3, 1, seed=0).supports_scan
+    assert not PyramidFL(8, 3, 1, seed=0).supports_scan
     bat, scn = _run_both(
-        model, ds, lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
-        max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+        model, ds, lambda: PyramidFL(8, 3, 1, seed=0),
+        max_rounds=3, learning_rate=0.1, batch_size=16, seed=0,
     )
     _assert_records_match(bat, scn)
+
+
+def test_scan_compiles_compression_strategies(tiny_fed):
+    """Regression for the old escape hatch: Fedcom/QuantizedFL used to force
+    the batched-loop fallback; with the device-resident update transform
+    they run compiled (and the transform really fires: Fedcom's scan run
+    produces sparsified aggregates, not the dense FedAvg ones)."""
+    ds, model = tiny_fed
+    assert Fedcom(8, 3, 1, seed=0).supports_scan
+    assert QuantizedFL(8, 3, 1, seed=0).supports_scan
+    assert Fedcom(8, 3, 1, seed=0).transforms_updates
+    dense = run_federated(
+        model, ds, FedAvg(8, 3, 1, seed=0), driver="scan",
+        max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    sparse = run_federated(
+        model, ds, Fedcom(8, 3, 1, seed=0, keep_frac=0.05), driver="scan",
+        max_rounds=2, learning_rate=0.1, batch_size=16, seed=0,
+    )
+    # same selection stream (base Strategy RNG), different aggregates
+    assert [r.selected for r in dense.records] == [r.selected for r in sparse.records]
+    d0 = np.asarray(jax.tree_util.tree_leaves(dense.final_params)[0])
+    s0 = np.asarray(jax.tree_util.tree_leaves(sparse.final_params)[0])
+    assert not np.allclose(d0, s0)
 
 
 def test_scan_rejects_non_batched_engines(tiny_fed):

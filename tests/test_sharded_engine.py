@@ -106,8 +106,9 @@ def test_three_engines_match_per_variant(tiny_fed, mesh8, cls, kw):
 
 @needs8
 def test_compression_strategy_through_sharded_engine(tiny_fed, mesh8):
-    """processes_updates strategies bounce per-client pytrees through the
-    host; the re-sharded processed matrix must still match the batched path."""
+    """transforms_updates strategies run the device update transform on the
+    D-sharded round buffer (no host bounce); the re-sharded transformed
+    matrix must still match the batched path."""
     ds, model = tiny_fed
     bat = _run(model, ds, lambda: Fedcom(8, 3, 1, seed=0, keep_frac=0.2),
                "batched", max_rounds=2, learning_rate=0.1, batch_size=16, seed=0)

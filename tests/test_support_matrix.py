@@ -1,0 +1,102 @@
+"""Docs-freshness contracts (docs/support-matrix.md, docs/writing-a-strategy.md).
+
+The support matrix is rendered from ``Strategy`` class attributes and
+embedded in the doc between markers: the doc can never silently drift from
+the code because this suite re-renders and compares.  The strategy-author
+guide's worked example is exec'd from the doc's own fenced code block and
+must pass the scan ≡ batched-loop equivalence harness.
+"""
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.fl import run_federated
+from repro.fl.baselines import (
+    Dropout, FedAvg, Fedcom, Fedprox, PyramidFL, QuantizedFL, TimelyFL,
+)
+from repro.fl.support_matrix import (
+    BEGIN_MARKER,
+    END_MARKER,
+    STRATEGY_CLASSES,
+    render_support_matrix,
+    scan_capable_names,
+)
+
+DOCS = os.path.join(os.path.dirname(__file__), "..", "docs")
+
+
+def _read(name: str) -> str:
+    with open(os.path.join(DOCS, name)) as f:
+        return f.read()
+
+
+# ---------------------------------------------------------------------------
+# docs/support-matrix.md ≡ code
+# ---------------------------------------------------------------------------
+def test_support_matrix_doc_matches_code():
+    doc = _read("support-matrix.md")
+    assert BEGIN_MARKER in doc and END_MARKER in doc
+    embedded = doc.split(BEGIN_MARKER, 1)[1].split(END_MARKER, 1)[0].strip()
+    assert embedded == render_support_matrix(), (
+        "docs/support-matrix.md is stale — regenerate the table with "
+        "`PYTHONPATH=src python -m repro.fl.support_matrix` and paste it "
+        "between the markers"
+    )
+
+
+def test_matrix_covers_every_shipped_strategy():
+    from repro.fl import baselines
+
+    shipped = {getattr(baselines, n) for n in baselines.__all__}
+    assert shipped <= set(STRATEGY_CLASSES)
+
+
+def test_all_section41_baselines_support_scan_except_pyramidfl():
+    """The acceptance criterion of the update-transform refactor: every
+    §4.1 baseline but PyramidFL compiles under driver='scan'."""
+    for cls in (FedAvg, Fedprox, Fedcom, QuantizedFL, Dropout, TimelyFL):
+        assert cls.supports_scan, cls.name
+    assert not PyramidFL.supports_scan
+    assert set(scan_capable_names()) == {
+        "flrce", "fedavg", "fedprox", "fedcom", "quantized8", "dropout",
+        "timelyfl",
+    }
+
+
+# ---------------------------------------------------------------------------
+# docs/writing-a-strategy.md worked example passes the equivalence harness
+# ---------------------------------------------------------------------------
+def _guide_example_namespace():
+    doc = _read("writing-a-strategy.md")
+    blocks = re.findall(r"```python\n(.*?)```", doc, re.DOTALL)
+    src = next(b for b in blocks if "class ClippedUpload" in b)
+    ns: dict = {}
+    exec(compile(src, "docs/writing-a-strategy.md", "exec"), ns)
+    return ns
+
+
+def test_guide_example_passes_equivalence_harness():
+    from repro.data import make_federated_classification
+    from repro.models.cnn import MLPClassifier
+
+    ClippedUpload = _guide_example_namespace()["ClippedUpload"]
+    assert ClippedUpload.supports_scan
+    ds = make_federated_classification(
+        num_clients=8, alpha=0.2, num_samples=800, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    model = MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+    kw = dict(max_rounds=4, learning_rate=0.1, batch_size=16, seed=0)
+    bat = run_federated(model, ds, ClippedUpload(8, 3, 2, seed=0), **kw)
+    scn = run_federated(
+        model, ds, ClippedUpload(8, 3, 2, seed=0),
+        driver="scan", scan_chunk_rounds=3, **kw,
+    )
+    assert [r.selected for r in bat.records] == [r.selected for r in scn.records]
+    np.testing.assert_allclose(bat.accuracy_curve(), scn.accuracy_curve(), atol=2e-3)
+    assert bat.ledger.energy_j == pytest.approx(scn.ledger.energy_j, rel=1e-12)
+    assert bat.ledger.total_bytes == pytest.approx(scn.ledger.total_bytes, rel=1e-12)
+    # the transform really ran: updates were clipped in both drivers
+    assert ClippedUpload(8, 3, 2, seed=0).transforms_updates

@@ -1,0 +1,165 @@
+"""Device-resident update-transform units (Strategy.update_transform).
+
+Covers the Fedcom row kernel against the 1-D reference, QuantizedFL's
+degenerate-scale regression (all-zero / inf / nan leaves must quantize to
+EXACTLY zero on both the host reference and the device path — the old host
+path passed zero leaves through and poisoned inf/nan leaves with NaN), the
+transform's determinism contract, and Dropout's pure per-(t, cid) masks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.baselines import Dropout, Fedcom, QuantizedFL
+from repro.fl.baselines.quantized import quantize_dequantize
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# Fedcom: row kernel ≡ per-row 1-D kernel ≡ the transform
+# ---------------------------------------------------------------------------
+def test_topk_mask_rows_matches_per_row_1d():
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(5, 700)), jnp.float32)
+    rows = kops.topk_mask_rows(u, keep_frac=0.1, block_d=256)
+    for i in range(u.shape[0]):
+        np.testing.assert_array_equal(
+            np.asarray(rows[i]),
+            np.asarray(kops.topk_mask(u[i], keep_frac=0.1, block_d=256)),
+        )
+
+
+def test_fedcom_transform_sparsifies_and_preserves_zero_tail():
+    rng = np.random.default_rng(1)
+    strat = Fedcom(8, 3, 1, seed=0, keep_frac=0.1)
+    template = {"w": jnp.zeros((20, 30)), "b": jnp.zeros((30,))}
+    apply = strat.update_transform(template)
+    d = 630
+    u = np.zeros((3, d + 10), np.float32)       # zero-padded tail (sharded D_pad)
+    u[:, :d] = rng.normal(size=(3, d))
+    out = np.asarray(jax.jit(apply)(jnp.int32(0), jnp.arange(3, dtype=jnp.int32),
+                                    jnp.asarray(u)))
+    kept = np.count_nonzero(out[:, :d], axis=1)
+    assert np.all(kept < d)                     # really sparsified
+    assert np.all(kept >= 1)
+    assert not np.any(out[:, d:])               # padded tail stays zero
+    # kept entries are bitwise the input entries
+    nz = out != 0
+    np.testing.assert_array_equal(out[nz], u[nz])
+
+
+def test_fedcom_rejects_bad_keep_frac():
+    with pytest.raises(ValueError, match="keep_frac"):
+        Fedcom(8, 3, 1, seed=0, keep_frac=0.0)
+
+
+# ---------------------------------------------------------------------------
+# QuantizedFL: degenerate-scale regression (host + device paths)
+# ---------------------------------------------------------------------------
+def test_host_quantize_zero_leaf_is_exactly_zero():
+    out = np.asarray(quantize_dequantize(jnp.zeros(17), np.random.default_rng(0)))
+    assert np.all(out == 0.0)
+
+
+@pytest.mark.parametrize("bad", [np.inf, -np.inf, np.nan])
+def test_host_quantize_nonfinite_leaf_is_exactly_zero(bad):
+    """Regression: inf/nan used to slip past the scale<=0 guard and produce
+    NaN dequantized updates (0 * inf)."""
+    u = jnp.asarray(np.array([1.0, bad, -0.5], np.float32))
+    out = np.asarray(quantize_dequantize(u, np.random.default_rng(0)))
+    assert np.all(out == 0.0)
+
+
+def test_host_quantize_single_element_leaf():
+    u = jnp.asarray(np.array([0.37], np.float32))
+    out = np.asarray(quantize_dequantize(u, np.random.default_rng(0)))
+    scale = 0.37 / 127
+    assert np.all(np.isfinite(out))
+    assert abs(float(out[0]) - 0.37) <= scale + 1e-7
+    # and the zero single-element leaf quantizes to exactly zero
+    out0 = np.asarray(quantize_dequantize(jnp.zeros(1), np.random.default_rng(0)))
+    assert np.all(out0 == 0.0)
+
+
+def test_device_quantize_degenerate_leaves_are_exactly_zero():
+    """Device transform, same contract: per-leaf scales off static offsets;
+    an all-zero, inf-containing or nan-containing leaf zeroes out while the
+    healthy leaf in the same row still quantizes within one level."""
+    template = {
+        "a": jnp.zeros((4,)),    # all-zero leaf
+        "b": jnp.zeros((3,)),    # will hold inf / nan
+        "c": jnp.zeros((1,)),    # single-element leaf
+        "d": jnp.zeros((64,)),   # healthy leaf
+    }
+    strat = QuantizedFL(8, 2, 1, seed=0)
+    apply = jax.jit(strat.update_transform(template))
+    rng = np.random.default_rng(3)
+    healthy = rng.normal(size=64).astype(np.float32)
+    rows = []
+    for bad in (np.inf, np.nan):
+        rows.append(np.concatenate([
+            np.zeros(4, np.float32),
+            np.array([1.0, bad, 0.5], np.float32),
+            np.array([0.37], np.float32),
+            healthy,
+        ]))
+    u = jnp.asarray(np.stack(rows))
+    out = np.asarray(apply(jnp.int32(5), jnp.arange(2, dtype=jnp.int32), u))
+    assert np.all(np.isfinite(out))
+    assert np.all(out[:, 0:4] == 0.0)           # zero leaf -> exact zero
+    assert np.all(out[:, 4:7] == 0.0)           # inf/nan leaf -> exact zero
+    scale_c = 0.37 / 127
+    assert np.all(np.abs(out[:, 7] - 0.37) <= scale_c + 1e-7)
+    scale_d = np.max(np.abs(healthy)) / 127
+    assert np.max(np.abs(out[:, 8:] - healthy)) <= scale_d + 1e-6
+
+
+def test_device_quantize_handles_zero_size_leaf():
+    """A size-0 leaf in the template must not crash the traced transform
+    (the host reference returns it empty; the device path skips it)."""
+    template = {"empty": jnp.zeros((0,)), "w": jnp.zeros((8,))}
+    strat = QuantizedFL(8, 2, 1, seed=0)
+    apply = jax.jit(strat.update_transform(template))
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(2, 8)), jnp.float32)
+    out = np.asarray(apply(jnp.int32(0), jnp.arange(2, dtype=jnp.int32), u))
+    assert out.shape == (2, 8)
+    assert np.all(np.isfinite(out))
+    # and the host reference agrees on the empty leaf
+    empty = np.asarray(quantize_dequantize(jnp.zeros((0,)), np.random.default_rng(0)))
+    assert empty.size == 0
+
+
+def test_device_quantize_is_deterministic_and_keyed_by_t_and_cid():
+    template = {"w": jnp.zeros((40,))}
+    strat = QuantizedFL(8, 2, 1, seed=0)
+    apply = jax.jit(strat.update_transform(template))
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(2, 40)), jnp.float32)
+    ids = jnp.arange(2, dtype=jnp.int32)
+    a = np.asarray(apply(jnp.int32(3), ids, u))
+    b = np.asarray(apply(jnp.int32(3), ids, u))
+    np.testing.assert_array_equal(a, b)          # same (t, ids) => same bits
+    c = np.asarray(apply(jnp.int32(4), ids, u))
+    assert not np.array_equal(a, c)              # stochastic rounding re-keyed
+
+
+# ---------------------------------------------------------------------------
+# Dropout: pure per-(t, cid) masks
+# ---------------------------------------------------------------------------
+def test_dropout_masks_are_pure_functions_of_t_and_cid():
+    template = {"w": jnp.zeros((12, 8)), "b": jnp.zeros((8,))}
+    strat = Dropout(8, 3, 1, seed=0, keep_rate=0.5)
+    m1 = strat.local_mask(2, 5, template)
+    m2 = strat.local_mask(2, 5, template)        # call order must not matter
+    for a, b in zip(jax.tree_util.tree_leaves(m1), jax.tree_util.tree_leaves(m2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    m3 = strat.local_mask(3, 5, template)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(m1), jax.tree_util.tree_leaves(m3))
+    )
+    # 1-D leaves (biases) stay fully trainable
+    np.testing.assert_array_equal(np.asarray(m1["b"]), np.ones(8))
+    # metadata form: no mask materialization without a template
+    assert strat.client_config(0, 0, None).mask is None
+    assert strat.client_config(0, 0, template).mask is not None
