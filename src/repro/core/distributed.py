@@ -121,6 +121,12 @@ def async_relationship_from_dots(
 # ---------------------------------------------------------------------------
 # Sharded reductions
 # ---------------------------------------------------------------------------
+# Every reduction below resolves its program through an ``lru_cache`` keyed by
+# (mesh, axes): building a fresh ``shard_map`` per call would re-trace and
+# re-dispatch the collective program every round (the dominant cost of the
+# sharded loop engine before PR 5).  The cached callables are jitted, so
+# repeat calls with the same shapes reuse the compiled executable, and calling
+# them inside an outer trace (the compiled round chunks) simply inlines them.
 def mesh_axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
     """Total number of D-shards: the product of the mesh sizes of ``axes``."""
     return int(np.prod([mesh.shape[a] for a in axes]))
@@ -144,65 +150,79 @@ def _pad_last(x: jax.Array, to: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-def sharded_gram(u: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
-    """``u @ u.T`` for (P, D) with D sharded over ``axes``; result replicated.
-
-    D is zero-padded to a multiple of the shard count, so ragged dims work.
-    """
-    u = _pad_last(u, pad_dim(u.shape[-1], mesh_axes_size(mesh, axes)))
+@functools.lru_cache(maxsize=None)
+def _gram_program(mesh: Mesh, axes: Tuple[str, ...]):
+    n_shards = mesh_axes_size(mesh, axes)
 
     def local(u_shard):
         g = kops.gram(u_shard)
         return jax.lax.psum(g, axes)
 
-    return _shard_map(local, mesh, P(None, axes), P(None, None))(u)
+    sm = _shard_map(local, mesh, P(None, axes), P(None, None))
+
+    def run(u):
+        return sm(_pad_last(u, pad_dim(u.shape[-1], n_shards)))
+
+    return jax.jit(run)
 
 
-def sharded_cross_gram(u: jax.Array, v: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
-    d_pad = pad_dim(u.shape[-1], mesh_axes_size(mesh, axes))
-    u, v = _pad_last(u, d_pad), _pad_last(v, d_pad)
+def sharded_gram(u: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
+    """``u @ u.T`` for (P, D) with D sharded over ``axes``; result replicated.
+
+    D is zero-padded to a multiple of the shard count, so ragged dims work.
+    """
+    return _gram_program(mesh, tuple(axes))(u)
+
+
+@functools.lru_cache(maxsize=None)
+def _cross_gram_program(mesh: Mesh, axes: Tuple[str, ...]):
+    n_shards = mesh_axes_size(mesh, axes)
 
     def local(u_shard, v_shard):
         g = kops.cross_gram(u_shard, v_shard)
         return jax.lax.psum(g, axes)
 
-    return _shard_map(local, mesh, (P(None, axes), P(None, axes)), P(None, None))(u, v)
+    sm = _shard_map(local, mesh, (P(None, axes), P(None, axes)), P(None, None))
+
+    def run(u, v):
+        d_pad = pad_dim(u.shape[-1], n_shards)
+        return sm(_pad_last(u, d_pad), _pad_last(v, d_pad))
+
+    return jax.jit(run)
+
+
+def sharded_cross_gram(u: jax.Array, v: jax.Array, mesh: Mesh, axes: Tuple[str, ...]) -> jax.Array:
+    return _cross_gram_program(mesh, tuple(axes))(u, v)
+
+
+@functools.lru_cache(maxsize=None)
+def _aggregate_program(mesh: Mesh, axes: Tuple[str, ...]):
+    n_shards = mesh_axes_size(mesh, axes)
+
+    def local(w_shard, u_shard, p_full):
+        return kops.weighted_aggregate(w_shard, u_shard, p_full)
+
+    sm = _shard_map(local, mesh, (P(axes), P(None, axes), P(None)), P(axes))
+
+    def run(w, updates, weights):
+        d = w.shape[-1]
+        d_pad = pad_dim(d, n_shards)
+        out = sm(_pad_last(w, d_pad), _pad_last(updates, d_pad), weights)
+        return out if d == d_pad else out[:d]
+
+    return jax.jit(run)
 
 
 def sharded_aggregate(
     w: jax.Array, updates: jax.Array, weights: jax.Array, mesh: Mesh, axes: Tuple[str, ...]
 ) -> jax.Array:
     """Eq. 4 on D-sharded vectors; no cross-shard traffic (weights replicated)."""
-    d = w.shape[-1]
-    d_pad = pad_dim(d, mesh_axes_size(mesh, axes))
-    w, updates = _pad_last(w, d_pad), _pad_last(updates, d_pad)
-
-    def local(w_shard, u_shard, p_full):
-        return kops.weighted_aggregate(w_shard, u_shard, p_full)
-
-    out = _shard_map(local, mesh, (P(axes), P(None, axes), P(None)), P(axes))(w, updates, weights)
-    return out if d == d_pad else out[:d]
+    return _aggregate_program(mesh, tuple(axes))(w, updates, weights)
 
 
-def sharded_relationship_dots(
-    u: jax.Array,      # (K, D) fresh updates
-    w: jax.Array,      # (D,)   global model
-    v: jax.Array,      # (M, D) update map V
-    a: jax.Array,      # (M, D) anchor map A
-    mesh: Mesh,
-    axes: Tuple[str, ...],
-):
-    """Every inner product ``relationship_block`` needs, in ONE shard_map.
-
-    Per shard: two Pallas cross-Gram contractions plus O(M) vector dots; one
-    fused psum reduces all nine results across the D-shards.  Returns the
-    replicated tuple ``(uv, ua, uw, vw, aw, vv, av, aa, ww)`` — see
-    ``repro.core.relationship.rows_from_relationship_dots`` for the meaning
-    of each.
-    """
-    d_pad = pad_dim(u.shape[-1], mesh_axes_size(mesh, axes))
-    u, v, a = _pad_last(u, d_pad), _pad_last(v, d_pad), _pad_last(a, d_pad)
-    w = _pad_last(w, d_pad)
+@functools.lru_cache(maxsize=None)
+def _relationship_dots_program(mesh: Mesh, axes: Tuple[str, ...]):
+    n_shards = mesh_axes_size(mesh, axes)
 
     def local(u_s, w_s, v_s, a_s):
         dots = (
@@ -223,7 +243,35 @@ def sharded_relationship_dots(
         P(None, None), P(None, None), P(None), P(None), P(None),
         P(None), P(None), P(None), P(),
     )
-    return _shard_map(local, mesh, in_specs, out_specs)(u, w, v, a)
+    sm = _shard_map(local, mesh, in_specs, out_specs)
+
+    def run(u, w, v, a):
+        d_pad = pad_dim(u.shape[-1], n_shards)
+        return sm(
+            _pad_last(u, d_pad), _pad_last(w, d_pad),
+            _pad_last(v, d_pad), _pad_last(a, d_pad),
+        )
+
+    return jax.jit(run)
+
+
+def sharded_relationship_dots(
+    u: jax.Array,      # (K, D) fresh updates
+    w: jax.Array,      # (D,)   global model
+    v: jax.Array,      # (M, D) update map V
+    a: jax.Array,      # (M, D) anchor map A
+    mesh: Mesh,
+    axes: Tuple[str, ...],
+):
+    """Every inner product ``relationship_block`` needs, in ONE shard_map.
+
+    Per shard: two Pallas cross-Gram contractions plus O(M) vector dots; one
+    fused psum reduces all nine results across the D-shards.  Returns the
+    replicated tuple ``(uv, ua, uw, vw, aw, vv, av, aa, ww)`` — see
+    ``repro.core.relationship.rows_from_relationship_dots`` for the meaning
+    of each.
+    """
+    return _relationship_dots_program(mesh, tuple(axes))(u, w, v, a)
 
 
 # ---------------------------------------------------------------------------

@@ -204,14 +204,20 @@ class FLrceServer:
     # operating on a device-resident carry dict instead of ``self.state``, so
     # the compiled round driver can fuse whole round chunks into one
     # ``lax.scan`` program.  ``scan_carry``/``load_scan_carry`` convert
-    # between the host state and the carry at chunk boundaries.  Only the
-    # single-device maps are supported (a mesh-bound server keeps the loop
-    # driver's per-round path).
+    # between the host state and the carry at chunk boundaries.  A mesh-bound
+    # server (``bind_mesh``) exports its V/A maps D-sharded and its traced
+    # pieces reduce through the cached shard_map programs
+    # (``sharded_relationship_dots`` / ``sharded_gram``), so the carry stays
+    # mesh-resident across the whole compiled chunk.
 
     def scan_carry(self) -> Dict[str, jax.Array]:
-        """Export the server state as a device carry (all arrays)."""
-        if self.mesh is not None:
-            raise ValueError("scan carry does not support mesh-bound servers")
+        """Export the server state as a device carry (all arrays).
+
+        Mesh-bound servers hand out the (M, D_pad) V/A maps exactly as they
+        live on the mesh — D-sharded over ``mesh_axes`` — and the O(M)/O(M²)
+        maps replicated; the scan driver carries them through the chunk
+        without ever replicating the O(M·D) state.
+        """
         st = self.state
         return {
             "rng": self._rng,
@@ -245,16 +251,28 @@ class FLrceServer:
         client_updates: jax.Array,  # (P, D)
         t: jax.Array,
     ) -> Dict[str, jax.Array]:
-        """:meth:`ingest` as a pure function of the carry (traced ids/t)."""
+        """:meth:`ingest` as a pure function of the carry (traced ids/t).
+
+        Mesh-bound servers receive ``w_t``/``client_updates`` already padded
+        to ``dim_pad`` and D-sharded (the sharded chunk's round buffers) and
+        reduce the nine dot groups through the cached fused shard_map, like
+        the loop path's :meth:`ingest`.
+        """
         w32 = w_t.astype(jnp.float32)
         u32 = client_updates.astype(jnp.float32)
         updates = carry["updates"].at[ids].set(u32)
         anchors = carry["anchors"].at[ids].set(w32[None, :])
         last_round = carry["last_round"].at[ids].set(t.astype(jnp.int32))
-        rows = relationship.relationship_block(
-            ids, u32, w32, updates, anchors, last_round, t,
-            carry["omega"][ids],
-        )
+        if self.mesh is not None:
+            rows = relationship.sharded_relationship_block(
+                ids, u32, w32, updates, anchors, last_round, t,
+                carry["omega"][ids], mesh=self.mesh, axes=self.mesh_axes,
+            )
+        else:
+            rows = relationship.relationship_block(
+                ids, u32, w32, updates, anchors, last_round, t,
+                carry["omega"][ids],
+            )
         omega = carry["omega"].at[ids].set(rows)
         heuristic = heuristics.update_heuristic_rows(carry["heuristic"], omega, ids)
         return {
@@ -283,9 +301,23 @@ class FLrceServer:
         average reaches ψ), so the decision is bitwise-identical to the host
         path's ``pairs / p >= psi`` in f64 — an on-device fp32 division
         could flip a near-threshold round.
+
+        Mesh-bound servers count pairs from a ``sharded_gram`` — the same
+        reduction the loop path's :meth:`check_early_stop` uses on exploit
+        rounds — so the D-sharded (P, D_pad) buffer never gets replicated.
         """
         p = selected_updates.shape[0]
-        pairs = early_stopping.conflict_pairs(selected_updates)
+        if self.mesh is not None:
+            from repro.core.distributed import (
+                conflict_pairs_from_gram,
+                sharded_gram,
+            )
+
+            pairs = conflict_pairs_from_gram(
+                sharded_gram(selected_updates, self.mesh, self.mesh_axes)
+            )
+        else:
+            pairs = early_stopping.conflict_pairs(selected_updates)
         avg = jnp.where(exploited, pairs / p, 0.0)
         # smallest integer n with n / p >= psi, resolved in host f64
         n0 = max(0, int(np.ceil(self.psi * p)))

@@ -1,5 +1,11 @@
 """Data substrate: Dirichlet non-iid partitioning + synthetic federated sets."""
-from repro.data.device import ChunkSchedule, DeviceClientStore, build_chunk_schedule
+from repro.data.device import (
+    ChunkSchedule,
+    DeviceClientStore,
+    build_chunk_schedule,
+    clear_schedule_memo,
+    shard_schedule,
+)
 from repro.data.loader import epoch_batches, num_batches
 from repro.data.partition import (
     dirichlet_label_partition,
@@ -18,6 +24,8 @@ __all__ = [
     "ChunkSchedule",
     "DeviceClientStore",
     "build_chunk_schedule",
+    "clear_schedule_memo",
+    "shard_schedule",
     "epoch_batches",
     "num_batches",
     "dirichlet_label_partition",

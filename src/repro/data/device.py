@@ -8,6 +8,12 @@ schedules (int32, ~feature_dim× smaller).  Selection then happens inside the
 jitted chunk program and the round's ``(P, S, B, …)`` batches are gathered
 on device from the store.
 
+For the mesh-sharded chunks (``driver="scan", engine="sharded"``) the store
+is laid out sharded over the mesh ``data`` axis along the client dimension
+(:meth:`DeviceClientStore.shard`) and each chunk's index schedules are placed
+the same way (:func:`shard_schedule`), so neither the samples nor the
+schedules are ever replicated across the data shards.
+
 Numerics contract: a schedule entry is drawn from the same per-``(t, client)``
 fold-in stream the loop engines consume (``repro.fl.client.client_batch_rng``,
 passed in as ``rng_for``), and padding follows ``build_cohort_plan`` exactly —
@@ -18,7 +24,7 @@ reduction order.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,17 +38,27 @@ from repro.data.synthetic import FederatedDataset
 class DeviceClientStore:
     """Every client's shard stacked into device tensors, padded to N_max."""
 
-    x: jax.Array              # (M, N_max, *feat) float32
-    y: jax.Array              # (M, N_max) int32
+    x: jax.Array              # (M[_pad], N_max, *feat) float32
+    y: jax.Array              # (M[_pad], N_max) int32
     sizes: jax.Array          # (M,) int32 — real samples per client
     sizes_host: np.ndarray    # host copy for schedule building / the ledger
 
     @property
     def num_clients(self) -> int:
-        return self.x.shape[0]
+        # NOT x.shape[0]: a mesh-sharded store pads the client axis to the
+        # data-axis size (padded rows are never selected)
+        return len(self.sizes_host)
 
     @classmethod
-    def from_dataset(cls, ds: FederatedDataset) -> "DeviceClientStore":
+    def from_dataset(
+        cls, ds: FederatedDataset, *, mesh=None, data_axis: str = "data"
+    ) -> "DeviceClientStore":
+        """Stack every client shard into device tensors.
+
+        With ``mesh`` the sample tensors are placed directly in the
+        data-axis-sharded layout — the host NumPy staging arrays are
+        ``device_put`` exactly once, never uploaded replicated first.
+        """
         sizes = ds.client_sizes().astype(np.int32)
         m = len(ds.client_indices)
         n_max = max(1, int(sizes.max()) if m else 1)
@@ -53,12 +69,28 @@ class DeviceClientStore:
             xk, yk = ds.client_data(k)
             x[k, : len(xk)] = xk
             y[k, : len(yk)] = yk
+        if mesh is None:
+            x_dev, y_dev = jnp.asarray(x), jnp.asarray(y)
+        else:
+            x_dev, y_dev = _place_client_sharded(x, y, mesh, data_axis)
         return cls(
-            x=jnp.asarray(x),
-            y=jnp.asarray(y),
+            x=x_dev,
+            y=y_dev,
             sizes=jnp.asarray(sizes),
             sizes_host=sizes,
         )
+
+    def shard(self, mesh, data_axis: str = "data") -> "DeviceClientStore":
+        """Re-lay an existing store out sharded over the mesh ``data`` axis.
+
+        Bounces the sample tensors through the host; prefer
+        ``from_dataset(ds, mesh=...)``, which places them sharded in one
+        transfer.  Kept for stores built without a mesh in hand.
+        """
+        x_dev, y_dev = _place_client_sharded(
+            np.asarray(self.x), np.asarray(self.y), mesh, data_axis
+        )
+        return dataclasses.replace(self, x=x_dev, y=y_dev)
 
     def gather_cohort(
         self,
@@ -76,6 +108,28 @@ class DeviceClientStore:
         bi = batch_idx[ids]                              # (P, S, B)
         rows = ids[:, None, None]
         return self.x[rows, bi], self.y[rows, bi], sample_w[ids], step_valid[ids]
+
+
+def _place_client_sharded(
+    x: np.ndarray, y: np.ndarray, mesh, data_axis: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Pad the client axis to the ``data``-axis size and ``device_put`` the
+    sample tensors split along it — each data shard holds only its
+    M/n_data slice of the O(M·N_max·feat) store (a padded row holds no real
+    samples and no id ever selects it)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.core.distributed import pad_dim
+
+    n_data = mesh.shape[data_axis]
+    m = x.shape[0]
+    m_pad = pad_dim(m, n_data)
+    if m_pad != m:
+        x = np.concatenate([x, np.zeros((m_pad - m, *x.shape[1:]), x.dtype)])
+        y = np.concatenate([y, np.zeros((m_pad - m, *y.shape[1:]), y.dtype)])
+    row = lambda a: NamedSharding(
+        mesh, PartitionSpec(data_axis, *([None] * (a.ndim - 1)))
+    )
+    return jax.device_put(x, row(x)), jax.device_put(y, row(y))
 
 
 @dataclasses.dataclass
@@ -101,6 +155,88 @@ class ChunkSchedule:
         return self.batch_idx.shape[2]
 
 
+def shard_schedule(
+    sched: ChunkSchedule, mesh, data_axis: str = "data"
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Place a chunk's index tensors sharded over the mesh ``data`` axis.
+
+    The client axis is zero-padded to the axis size (matching
+    :meth:`DeviceClientStore.shard`; a padded client's schedule is
+    all-invalid and never gathered) so each data shard receives only its
+    slice of the (R, M, S, B) tensors instead of a full replica.  Returns
+    device ``(batch_idx, sample_w, step_valid)``.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.core.distributed import pad_dim
+
+    n_data = mesh.shape[data_axis]
+    m = sched.batch_idx.shape[1]
+    m_pad = pad_dim(m, n_data)
+
+    def place(a: np.ndarray) -> jax.Array:
+        if m_pad != m:
+            widths = [(0, 0), (0, m_pad - m)] + [(0, 0)] * (a.ndim - 2)
+            a = np.pad(a, widths)
+        spec = PartitionSpec(None, data_axis, *([None] * (a.ndim - 2)))
+        return jax.device_put(a, NamedSharding(mesh, spec))
+
+    return place(sched.batch_idx), place(sched.sample_w), place(sched.step_valid)
+
+
+# ---------------------------------------------------------------------------
+# Chunk schedule building (host)
+# ---------------------------------------------------------------------------
+# Permutation memo for repeated builds: a (t, cid) schedule is a pure
+# function of (rng stream, n, epochs, batch_size), and the stream is keyed by
+# the caller-provided ``cache_key`` (the job seed).  Benchmarks and
+# equivalence harnesses build the same chunk schedules several times per
+# process (batched vs scan legs, chunk-alignment sweeps); the memo turns the
+# repeat draws into array reuse.  Bounded FIFO: a single long job inserts
+# strictly-increasing round keys it never reads back, so without a cap the
+# memo would grow O(rounds · clients) — eviction keeps the repeat-build win
+# (which only needs the most recent jobs' entries) at constant memory.
+_SCHEDULE_MEMO: Dict[tuple, Tuple[np.ndarray, np.ndarray]] = {}
+_SCHEDULE_MEMO_MAX = 4096
+
+
+def clear_schedule_memo() -> None:
+    _SCHEDULE_MEMO.clear()
+
+
+def _memo_put(key: tuple, val: Tuple[np.ndarray, np.ndarray]) -> None:
+    while len(_SCHEDULE_MEMO) >= _SCHEDULE_MEMO_MAX:
+        _SCHEDULE_MEMO.pop(next(iter(_SCHEDULE_MEMO)))   # FIFO (dict order)
+    _SCHEDULE_MEMO[key] = val
+
+
+def _client_schedule(
+    n: int,
+    e: int,
+    batch_size: int,
+    rng_k: np.random.Generator,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One (t, client) schedule: ``(idx (s_k, B) int32, w (s_k, B) f32)``.
+
+    Vectorized form of the reference per-batch loop: the e permutation draws
+    stay sequential on the client's fold-in stream (that order is the
+    numerics contract), but batching is a pad + reshape — only the last
+    batch of an epoch is partial, so padding the flattened epoch tail is
+    bitwise-identical to the old per-``start`` slicing.
+    """
+    nb = -(-n // batch_size) if n else 0
+    s_k = e * nb
+    if s_k == 0:
+        return (
+            np.zeros((0, batch_size), np.int32),
+            np.zeros((0, batch_size), np.float32),
+        )
+    perms = np.stack([rng_k.permutation(n) for _ in range(e)])        # (e, n)
+    pad = nb * batch_size - n
+    idx = np.pad(perms, ((0, 0), (0, pad))).reshape(s_k, batch_size)
+    w = np.pad(np.ones((e, n), np.float32), ((0, 0), (0, pad)))
+    return idx.astype(np.int32), w.reshape(s_k, batch_size)
+
+
 def build_chunk_schedule(
     sizes: np.ndarray,                       # (M,) samples per client
     epochs: np.ndarray,                      # (R, M) local epochs per (round, client)
@@ -109,6 +245,7 @@ def build_chunk_schedule(
     rng_for: Callable[[int, int], np.random.Generator],
     *,
     bucket_steps: bool = True,
+    cache_key: Optional[int] = None,
 ) -> ChunkSchedule:
     """Draw every (round, client) batch schedule for a chunk of rounds.
 
@@ -119,6 +256,11 @@ def build_chunk_schedule(
     driver-independent.  The step axis is sized to the chunk-wide maximum and
     bucketed to a power of two so the jitted chunk program retraces per size
     bucket, not per chunk.
+
+    ``cache_key`` (the job's batch seed) enables the permutation memo: when
+    set, each ``(cache_key, t, cid, n, e, batch_size)`` draw is computed once
+    per process and reused — ``rng_for`` is not even invoked on a hit, which
+    is exact because the stream is a pure function of ``(seed, t, cid)``.
     """
     sizes = np.asarray(sizes)
     epochs = np.asarray(epochs)
@@ -133,21 +275,15 @@ def build_chunk_schedule(
         for cid in range(m):
             n = int(sizes[cid])
             e = max(1, int(epochs[r, cid]))
-            nb = -(-n // batch_size) if n else 0
-            s_k = e * nb
-            idx = np.zeros((s_k, batch_size), np.int32)
-            w = np.zeros((s_k, batch_size), np.float32)
-            rng_k = rng_for(t, cid)
-            s = 0
-            for _ in range(e):
-                order = rng_k.permutation(n)
-                for start in range(0, n, batch_size):
-                    ix = order[start : start + batch_size]
-                    idx[s, : len(ix)] = ix
-                    w[s, : len(ix)] = 1.0
-                    s += 1
-            per_client.append((idx, w, s_k))
-            s_max = max(s_max, s_k)
+            memo_key = (cache_key, t, cid, n, e, batch_size)
+            if cache_key is not None and memo_key in _SCHEDULE_MEMO:
+                idx, w = _SCHEDULE_MEMO[memo_key]
+            else:
+                idx, w = _client_schedule(n, e, batch_size, rng_for(t, cid))
+                if cache_key is not None:
+                    _memo_put(memo_key, (idx, w))
+            per_client.append((idx, w, idx.shape[0]))
+            s_max = max(s_max, idx.shape[0])
         per_round.append(per_client)
 
     s_pad = _bucket_steps(s_max) if bucket_steps else s_max

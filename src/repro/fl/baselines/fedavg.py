@@ -7,3 +7,6 @@ class FedAvg(Strategy):
     # uniform host-RNG selection + identity configs: the scan driver
     # precomputes a chunk's selections and compiles the rest of the round
     supports_scan = True
+    # metadata-only configs, no transform, no carry state ⇒ the compiled
+    # chunk also runs mesh-sharded
+    supports_sharded_scan = True

@@ -13,6 +13,8 @@ class Fedprox(Strategy):
     # base host-RNG selection; the constant per-client µ rides into the
     # compiled chunk as a (M,) prox vector, so scan support holds
     supports_scan = True
+    # the µ vector is replicated metadata — the mesh chunk compiles too
+    supports_sharded_scan = True
 
     def __init__(self, *args, mu: float = 0.01, epoch_fraction: float = 0.4, **kwargs):
         super().__init__(*args, **kwargs)

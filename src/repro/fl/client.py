@@ -312,8 +312,15 @@ class BatchedCohortTrainer:
         self.model = model
         self.lr = learning_rate
         self.batch_size = batch_size
+        # the (P, S) step-validity buffer is freshly uploaded each round and
+        # never read after the program runs; donating it frees XLA to write
+        # the same-shaped (P, S) loss-trace output into it in place.  (The
+        # other plan tensors have no same-shaped output to alias, so
+        # donating them would only trigger the not-usable warning.)
         self._train = jax.jit(
-            self._make_train(), static_argnames=("use_prox", "has_mask")
+            self._make_train(),
+            static_argnames=("use_prox", "has_mask"),
+            donate_argnums=(4,),
         )
 
     def _make_train(self):
@@ -434,12 +441,23 @@ class ShardedCohortTrainer(BatchedCohortTrainer):
         self.data_axis = data_axis
         self.axes = tuple(mesh.axis_names)
         self.num_shards = mesh_axes_size(mesh, self.axes)
+        self._sharded_raw_cache: Dict[Tuple[bool, bool], Any] = {}
         self._sharded_train_cache: Dict[Tuple[bool, bool], Any] = {}
         self._reshard_cache: Dict[Tuple[int, int, int], Any] = {}
+        # cache telemetry: a round loop must resolve each program ONCE per
+        # job key and hit the cache afterwards (tests/test_sharded_engine.py
+        # asserts the hit counts — per-round rebuilds were the retrace churn
+        # behind the pre-PR-5 sharded rounds/s)
+        self.train_cache_hits = 0
+        self.train_cache_misses = 0
+        self.reshard_cache_hits = 0
+        self.reshard_cache_misses = 0
 
-    def _sharded_train(self, use_prox: bool, has_mask: bool):
+    def _sharded_train_raw(self, use_prox: bool, has_mask: bool):
+        """The bare shard_mapped cohort program (not jitted) — the form the
+        compiled round chunks trace straight into their scan body."""
         key = (use_prox, has_mask)
-        if key not in self._sharded_train_cache:
+        if key not in self._sharded_raw_cache:
             from jax.sharding import PartitionSpec as P
             from repro.core.distributed import _shard_map
 
@@ -449,10 +467,47 @@ class ShardedCohortTrainer(BatchedCohortTrainer):
             dspec = P(self.data_axis)
             in_specs = (P(), dspec, dspec, dspec, dspec, dspec, dspec, dspec)
             out_specs = (dspec, P(self.data_axis, None), dspec)
-            self._sharded_train_cache[key] = jax.jit(
-                _shard_map(train, self.mesh, in_specs, out_specs)
+            self._sharded_raw_cache[key] = _shard_map(
+                train, self.mesh, in_specs, out_specs
             )
+        return self._sharded_raw_cache[key]
+
+    def _sharded_train(self, use_prox: bool, has_mask: bool):
+        key = (use_prox, has_mask)
+        if key not in self._sharded_train_cache:
+            self.train_cache_misses += 1
+            self._sharded_train_cache[key] = jax.jit(
+                self._sharded_train_raw(use_prox, has_mask),
+                donate_argnums=(4,),
+            )
+        else:
+            self.train_cache_hits += 1
         return self._sharded_train_cache[key]
+
+    def reshard_rows_traced(self, flat: jax.Array, n_real: int) -> jax.Array:
+        """The one pad-then-all-to-all reshard, as a traceable expression.
+
+        Pad D under the producer's row sharding, reshard the evenly shaped
+        matrix (a clean all-to-all), THEN slice the now-replicated client
+        axis — letting XLA reshard the ragged unpadded input instead forces
+        a full rematerialization.  Shared verbatim by the jitted per-round
+        path (:meth:`shard_updates`) and the compiled chunk body
+        (``repro.fl.scan_driver``), so the loop and scan reshards can never
+        drift apart.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.distributed import pad_dim
+
+        d = flat.shape[1]
+        d_pad = pad_dim(d, self.num_shards)
+        g = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
+        g = jax.lax.with_sharding_constraint(
+            g, NamedSharding(self.mesh, P(self.data_axis, None))
+        )
+        g = jax.lax.with_sharding_constraint(
+            g, NamedSharding(self.mesh, P(None, self.axes))
+        )
+        return g[:n_real]
 
     def _reshard_flat(self, n_real: int, d: int):
         """One jitted pad+reshard: drop padded clients, zero-pad D to the
@@ -462,24 +517,27 @@ class ShardedCohortTrainer(BatchedCohortTrainer):
         d_pad = pad_dim(d, self.num_shards)
         key = (n_real, d, d_pad)
         if key not in self._reshard_cache:
+            self.reshard_cache_misses += 1
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             sharding = NamedSharding(self.mesh, P(None, self.axes))
-
-            row_sharding = NamedSharding(self.mesh, P(self.data_axis, None))
-
-            def reshard(f):
-                # pad under the producer's row sharding, reshard the evenly
-                # shaped matrix (a clean all-to-all), THEN slice the
-                # now-replicated client axis — letting XLA reshard the ragged
-                # unpadded input instead forces a full rematerialization
-                g = jnp.pad(f, ((0, 0), (0, d_pad - d)))
-                g = jax.lax.with_sharding_constraint(g, row_sharding)
-                g = jax.lax.with_sharding_constraint(g, sharding)
-                return g[:n_real]
-
-            self._reshard_cache[key] = jax.jit(reshard, out_shardings=sharding)
+            self._reshard_cache[key] = jax.jit(
+                lambda f: self.reshard_rows_traced(f, n_real),
+                out_shardings=sharding,
+            )
+        else:
+            self.reshard_cache_hits += 1
         return self._reshard_cache[key]
+
+    def prepare_job(self, clients_per_round: int, dim: int) -> None:
+        """Resolve the job's reshard program once, before the round loop.
+
+        ``run_federated`` calls this at engine setup so the per-round
+        ``shard_updates`` path is a pure cache hit; the train program still
+        resolves on first use (its ``(use_prox, has_mask)`` key needs the
+        round's configs) and is likewise a hit from round 2 on.
+        """
+        self._reshard_flat(clients_per_round, dim)
 
     def train_cohort(
         self,

@@ -20,6 +20,9 @@ class FLrce(Strategy):
     # selection (Alg. 2), ingest (Alg. 1/Eq. 5-7) and ES (Alg. 3) all have
     # device-functional variants on FLrceServer, so the whole round compiles
     supports_scan = True
+    # ... and every O(D) carry piece (V/A maps, ingest dots, ES gram) has a
+    # mesh-sharded form, so the compiled chunk also runs on a mesh
+    supports_sharded_scan = True
 
     def __init__(
         self,

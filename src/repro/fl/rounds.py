@@ -31,10 +31,14 @@ executes:
 * ``driver="loop"`` (default) — one Python iteration per round, one host
   sync per round.  Works with every engine and strategy.
 * ``driver="scan"`` — whole chunks of rounds compile into one ``lax.scan``
-  program over a device-resident carry; the host syncs once per chunk
-  (``repro.fl.scan_driver``).  Requires ``engine="batched"`` and a strategy
-  with ``supports_scan`` — FLrce and every §4.1 baseline except PyramidFL
-  (whose selection depends on round results); see docs/support-matrix.md.
+  program over a device-resident, donated carry; the host syncs once per
+  chunk (``repro.fl.scan_driver``).  Composes with ``engine="batched"``
+  (the fused single-device path) and ``engine="sharded"`` (the same chunk
+  with the body shard_mapped over the mesh and every O(D) buffer D-sharded
+  across rounds).  Requires a strategy with ``supports_scan`` — FLrce and
+  every §4.1 baseline except PyramidFL (whose selection depends on round
+  results) — and, for the sharded chunks, ``supports_sharded_scan``
+  (FLrce, FedAvg, Fedprox); see docs/support-matrix.md.
 
 Update post-processing (Fedcom top-k, QuantizedFL int8) is a device-resident
 ``Strategy.update_transform`` applied to the round's flat (P, D) update
@@ -224,32 +228,50 @@ def run_federated(
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
     if driver == "scan":
-        if engine != "batched":
+        if engine == "sequential":
             raise ValueError(
-                f"driver='scan' is the compiled single-device path and requires "
-                f"engine='batched', got engine={engine!r}"
+                "driver='scan' compiles the batched or sharded engines; "
+                f"engine='sequential' is the per-step reference loop (got "
+                f"engine={engine!r}, use 'batched')"
             )
-        if strategy.supports_scan:
+        compiled = strategy.supports_scan and (
+            engine != "sharded" or strategy.supports_sharded_scan
+        )
+        if compiled:
             from repro.fl.scan_driver import run_scan_driver
 
+            if engine == "sharded" and mesh is None:
+                from repro.launch.mesh import make_engine_mesh
+
+                mesh = make_engine_mesh()
             return run_scan_driver(
                 model, dataset, strategy,
                 max_rounds=max_rounds, learning_rate=learning_rate,
                 batch_size=batch_size, device=device, eval_every=eval_every,
                 seed=seed, init_params=init_params, verbose=verbose,
                 chunk_rounds=scan_chunk_rounds,
+                mesh=mesh if engine == "sharded" else None,
             )
-        # host-coupled per-round logic (PyramidFL's loss-driven selection):
-        # fall back to the batched loop, which handles every strategy
+        # host-coupled per-round logic (PyramidFL's loss-driven selection) or
+        # a strategy without the mesh-chunk contract (masks/freeze flags,
+        # update transforms): fall back to the matching loop engine, which
+        # handles every strategy
         if verbose:
-            print(f"[{strategy.name}] no scan support; falling back to engine='batched'")
+            print(
+                f"[{strategy.name}] no scan support for engine={engine!r}; "
+                f"falling back to the {engine} loop driver"
+            )
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
     # the strategy's device-resident update post-processing stage (Fedcom
     # top-k, QuantizedFL int8); jitted once, applied to the round's flat
-    # (P, D) buffer by every engine
+    # (P, D) buffer by every engine.  The matrix argument is donated: the
+    # transformed matrix aliases the incoming buffer in place (the engine
+    # rebinds and never reads the pre-transform updates again).
     transform = strategy.update_transform(params)
-    apply_transform = jax.jit(transform) if transform is not None else None
+    apply_transform = (
+        jax.jit(transform, donate_argnums=(2,)) if transform is not None else None
+    )
     trainer: Any
     shard_vec = None
     if engine == "sequential":
@@ -262,6 +284,9 @@ def run_federated(
 
             mesh = make_engine_mesh()
         trainer = ShardedCohortTrainer(model, learning_rate, batch_size, mesh)
+        # resolve the job's reshard program once, outside the round loop —
+        # every per-round shard_updates call is then a pure cache hit
+        trainer.prepare_job(strategy.p, n_params)
         # strategies with O(D) state (FLrce's V/A maps) move it onto the mesh
         strategy.bind_mesh(mesh, trainer.axes)
         # the round's (D,) broadcast snapshot: zero-padded to the shard count

@@ -10,9 +10,23 @@ models — that dispatch overhead dominates.  This driver removes it:
   Eq. 4 aggregate → strategy ingest/ES (Alg. 1/3) — is ONE jitted
   ``lax.scan`` program over a fully device-resident carry
   (flat model + the strategy's :class:`ScanProgram` carry);
+* the carry buffers are **donated** (``donate_argnums``), so the flat model,
+  the strategy's O(M·D) maps and the accuracy scalar update in place across
+  chunks instead of copy-churning per chunk;
 * the host syncs exactly once per chunk: it reads the stacked per-round
   outputs (ids, stop flags, accuracies, losses — O(R·P) scalars), flushes
   ``RoundRecord``s and the resource ledger, and checks the stop flag.
+
+With ``mesh=`` (``run_federated(driver="scan", engine="sharded")``) the same
+chunk program runs mesh-sharded: the scan body shard_maps cohort training
+over the mesh ``data`` axis (the :class:`ShardedCohortTrainer` program), does
+the one pad-then-all-to-all reshard to the D-sharded round layout, aggregates
+through ``sharded_aggregate``, and the strategy's carry pieces reduce through
+the cached sharded Gram programs (FLrce ingest via
+``sharded_relationship_dots``, Alg. 3 via ``sharded_gram``).  The flat ``w``
+and the (M, D_pad) maps stay D-sharded across rounds AND across chunks — the
+O(D) state never leaves the mesh, and host traffic stays O(R·P) scalars per
+chunk.
 
 Numerics match the batched loop driver within fp32 tolerance: batch
 schedules come from the identical ``client_batch_rng`` fold-in streams
@@ -29,8 +43,10 @@ round's — the wasted rounds are bounded by ``chunk_rounds``.
 
 Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()`` — FLrce
 and every §4.1 baseline except PyramidFL, whose loss-driven selection/epoch
-plan cannot be precomputed; ``run_federated`` falls back to the batched loop
-for those (docs/support-matrix.md tabulates the full picture).
+plan cannot be precomputed; the mesh-sharded chunks additionally require
+``supports_sharded_scan`` (metadata-only configs, no update transform).
+``run_federated`` falls back to the matching loop engine otherwise
+(docs/support-matrix.md tabulates the full picture).
 """
 from __future__ import annotations
 
@@ -41,11 +57,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import flatten_pytree
-from repro.data.device import DeviceClientStore, build_chunk_schedule
+from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
+from repro.data.device import DeviceClientStore, build_chunk_schedule, shard_schedule
 from repro.data.synthetic import FederatedDataset
 from repro.fl.client import (
     BatchedCohortTrainer,
+    ShardedCohortTrainer,
     client_batch_rng,
     stack_freeze_flags,
     stack_variant_trees,
@@ -65,12 +82,19 @@ def _tree_where(pred, on_true, on_false):
 
 
 class _ChunkRunner:
-    """Builds and caches the jitted chunk program for one FL job."""
+    """Builds and caches the jitted chunk program for one FL job.
+
+    ``mesh=None`` is the single-device path; with a mesh the chunk body runs
+    the shard_mapped cohort program and the D-sharded round pipeline.  Either
+    way the chunk carry (flat w, strategy carry, accuracy) is donated: the
+    output buffers alias the inputs, so the O(D)/O(M·D) state updates in
+    place chunk over chunk.
+    """
 
     def __init__(self, model, store: DeviceClientStore, unflatten, program,
                  transform, *, learning_rate: float, batch_size: int,
                  clients_per_round: int, eval_every: int, max_rounds: int,
-                 eval_x, eval_y):
+                 eval_x, eval_y, mesh=None):
         self.model = model
         self.store = store
         self.unflatten = unflatten
@@ -80,16 +104,33 @@ class _ChunkRunner:
         self.eval_every = eval_every
         self.max_rounds = max_rounds
         self.eval_x, self.eval_y = eval_x, eval_y
-        self._trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
-        self._train_raw = self._trainer._make_train()
+        self.mesh = mesh
+        if mesh is None:
+            self._trainer = BatchedCohortTrainer(model, learning_rate, batch_size)
+            self._train_raw = self._trainer._make_train()
+            self.p_pad = clients_per_round
+        else:
+            self._trainer = ShardedCohortTrainer(model, learning_rate, batch_size, mesh)
+            self.axes = self._trainer.axes
+            self.n_data = mesh.shape[self._trainer.data_axis]
+            self.p_pad = pad_dim(clients_per_round, self.n_data)
         self._cache: Dict[Tuple[bool, bool], Any] = {}
 
-    def _build(self, use_prox: bool, has_mask: bool):
+    def _build(self, use_prox: bool, has_mask: bool, carry_shardings=None):
         store, program, unflatten = self.store, self.program, self.unflatten
-        train, p, transform = self._train_raw, self.p, self.transform
+        p, transform, mesh = self.p, self.transform, self.mesh
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
         sizes_f = store.sizes.astype(jnp.float32)
+        if mesh is None:
+            train = self._train_raw
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            trainer = self._trainer
+            train_sharded = trainer._sharded_train_raw(use_prox, has_mask)
+            axes, p_pad = self.axes, self.p_pad
+            rep_sharding = NamedSharding(mesh, P())
 
         def body(carry, x_t):
             w, sc, stopped, last_acc = carry
@@ -101,24 +142,54 @@ class _ChunkRunner:
                 sc_new, ids, exploited = program.select(sc, t, phi)
             else:
                 sc_new, ids, exploited = sc, host_ids, jnp.asarray(False)
+            sel_sizes = sizes_f[ids]
 
             # --- gather the cohort's padded batches from the store ----------
-            x, y, sw, sv = store.gather_cohort(ids, bi_t, sw_t, sv_t)
-            mu = prox_t[ids]
-            _, flat, losses = train(
-                params_t, x, y, sw, sv, mask_t, freeze_t, mu,
-                use_prox=use_prox, has_mask=has_mask,
-            )
+            if mesh is None:
+                x, y, sw, sv = store.gather_cohort(ids, bi_t, sw_t, sv_t)
+                mu = prox_t[ids]
+                _, flat, losses = train(
+                    params_t, x, y, sw, sv, mask_t, freeze_t, mu,
+                    use_prox=use_prox, has_mask=has_mask,
+                )
+            else:
+                # pad the cohort to the data axis with exact no-op clients
+                # (zero step validity ⇒ identically-zero update rows), train
+                # shard_mapped over it, then do the ONE pad-then-all-to-all
+                # reshard to the (P, D_pad) D-sharded round-buffer layout
+                # the O(P) index vector MUST stay replicated: letting the
+                # partitioner row-shard it over ``data`` miscompiles the
+                # downstream store/schedule gathers (wrong rows, observed on
+                # 2x4 CPU meshes) — a with_sharding_constraint pins it
+                if p_pad > p:
+                    ids_pad = jnp.concatenate(
+                        [ids, jnp.zeros((p_pad - p,), jnp.int32)]
+                    )
+                else:
+                    ids_pad = ids
+                ids_pad = jax.lax.with_sharding_constraint(ids_pad, rep_sharding)
+                x, y, sw, sv = store.gather_cohort(ids_pad, bi_t, sw_t, sv_t)
+                if p_pad > p:
+                    valid_row = (jnp.arange(p_pad) < p).astype(sv.dtype)
+                    sv = sv * valid_row[:, None]
+                mu = prox_t[ids_pad]
+                _, flat, losses = train_sharded(
+                    params_t, x, y, sw, sv, mask_t, freeze_t, mu
+                )
+                flat = trainer.reshard_rows_traced(flat, p)
+                losses, sv = losses[:p], sv[:p]
 
             # --- device-resident update transform (compression) -------------
             if transform is not None:
                 flat = transform(t, ids, flat)
 
             # --- Eq. 4 aggregation from the flat buffer ---------------------
-            sel_sizes = sizes_f[ids]
             total = jnp.sum(sel_sizes)
             weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
-            w_new = w + weights @ flat
+            if mesh is None:
+                w_new = w + weights @ flat
+            else:
+                w_new = sharded_aggregate(w, flat, weights, mesh, axes)
 
             # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -----------
             if program.post_round is not None:
@@ -164,14 +235,32 @@ class _ChunkRunner:
         def chunk(w, sc, last_acc, xs):
             carry0 = (w, sc, jnp.asarray(False), last_acc)
             (w, sc, stopped, last_acc), outs = jax.lax.scan(body, carry0, xs)
+            if carry_shardings is not None:
+                # pin the output carry to the INPUT carry's layouts: without
+                # this GSPMD is free to emit e.g. FLrce's (M,) round map
+                # data-sharded, which changes the next call's jit signature
+                # (one silent full recompile per job) and breaks the donated
+                # in-place aliasing
+                w, sc, last_acc = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint,
+                    (w, sc, last_acc), carry_shardings,
+                )
             return w, sc, last_acc, outs
 
-        return jax.jit(chunk)
+        # donated carry: the chunk's (D[,_pad]) flat model, the strategy
+        # carry (FLrce's Ω/H and (M, D_pad) V/A maps) and the accuracy
+        # scalar alias their outputs — no per-chunk copy of the O(M·D) state
+        return jax.jit(chunk, donate_argnums=(0, 1, 2))
 
     def run_chunk(self, w, sc, last_acc, xs, use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)
         if key not in self._cache:
-            self._cache[key] = self._build(use_prox, has_mask)
+            shardings = None
+            if self.mesh is not None:
+                shardings = jax.tree_util.tree_map(
+                    lambda l: l.sharding, (w, sc, last_acc)
+                )
+            self._cache[key] = self._build(use_prox, has_mask, shardings)
         return self._cache[key](w, sc, last_acc, xs)
 
 
@@ -189,13 +278,19 @@ def run_scan_driver(
     init_params: Optional[PyTree],
     verbose: bool,
     chunk_rounds: int,
+    mesh=None,
 ):
     """Algorithm 4's outer loop as jitted round chunks.  Called by
-    ``run_federated(driver="scan")``; returns the same :class:`FLResult`."""
+    ``run_federated(driver="scan")`` — with ``mesh`` for
+    ``engine="sharded"`` — and returns the same :class:`FLResult`."""
     from repro.fl.rounds import RoundRecord, finalize_result
 
     if chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    if mesh is not None:
+        # O(D) strategy state (FLrce's V/A maps) moves onto the mesh BEFORE
+        # the carry is exported, so scan_program() hands out sharded arrays
+        strategy.bind_mesh(mesh, tuple(mesh.axis_names))
     program = strategy.scan_program()
     if program.post_round is not None and program.select is None:
         raise ValueError(
@@ -208,22 +303,67 @@ def run_scan_driver(
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
     w, unflatten = flatten_pytree(params)
-    store = DeviceClientStore.from_dataset(dataset)
+    # with a mesh the store is placed data-axis-sharded in ONE transfer
+    store = DeviceClientStore.from_dataset(dataset, mesh=mesh)
     m = store.num_clients
     ledger = ResourceLedger(device=device)
     # the strategy's device-resident update post-processing (Fedcom top-k,
     # QuantizedFL int8) traces straight into the compiled chunk
     transform = strategy.update_transform(params)
+    if mesh is not None:
+        if transform is not None:
+            raise ValueError(
+                f"{strategy.name} declares an update_transform, which operates "
+                "on the replicated flat matrix; the mesh-sharded chunks do not "
+                "support it (supports_sharded_scan must be False)"
+            )
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        axes = tuple(mesh.axis_names)
+        from repro.core.distributed import mesh_axes_size
+
+        d_pad = pad_dim(n_params, mesh_axes_size(mesh, axes))
+        w = jax.device_put(
+            jnp.pad(w, (0, d_pad - n_params)),
+            NamedSharding(mesh, PartitionSpec(axes)),
+        )
     runner = _ChunkRunner(
         model, store, unflatten, program, transform,
         learning_rate=learning_rate, batch_size=batch_size,
         clients_per_round=strategy.p, eval_every=eval_every,
         max_rounds=max_rounds,
         eval_x=jnp.asarray(dataset.eval_x), eval_y=jnp.asarray(dataset.eval_y),
+        mesh=mesh,
     )
 
     sc = program.carry
-    last_acc = jnp.float32(0.0)
+    if mesh is None:
+        # a strategy whose carry was bound to a multi-device mesh (a prior
+        # engine="sharded" run on the same object) cannot enter the
+        # single-device chunk: its O(D) state is padded/sharded for that
+        # mesh and the trace would fail with an opaque shape error
+        for leaf in jax.tree_util.tree_leaves(sc):
+            sh = getattr(leaf, "sharding", None)
+            if getattr(leaf, "committed", False) and len(leaf.devices()) > 1:
+                raise ValueError(
+                    f"{strategy.name}'s scan carry is bound to a multi-device "
+                    f"mesh ({sh}); run with engine='sharded' (pass the mesh) "
+                    "or use a freshly constructed strategy"
+                )
+    # Commit the initial carry with its steady-state placement.  From chunk
+    # 2 on, the carry arrives as the previous chunk's committed outputs; an
+    # uncommitted first carry would give chunk 1 a different jit signature
+    # and force ONE full recompile of the chunk program on the second call.
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        rep = NamedSharding(mesh, PartitionSpec())
+    else:
+        rep = next(iter(w.devices()))
+    commit = lambda l: l if getattr(l, "committed", False) else jax.device_put(l, rep)
+    w = commit(w)
+    sc = jax.tree_util.tree_map(commit, sc)
+    last_acc = commit(jnp.float32(0.0))
     records: List[RoundRecord] = []
     stopped = False
     t0 = 0
@@ -248,48 +388,11 @@ def run_scan_driver(
         epochs = np.asarray([[cfg.epochs for cfg in row] for row in cfg_grid], np.int32)
         prox = np.asarray([[cfg.prox_mu for cfg in row] for row in cfg_grid], np.float32)
         use_prox = bool(np.any(prox > 0.0))
-
-        # batch schedules from the SAME fold-in streams the loop engines use
-        sched = build_chunk_schedule(
-            store.sizes_host, epochs, batch_size, t0,
-            lambda t, cid: client_batch_rng(seed, t, cid),
-        )
-        if program.select is None:
-            host_ids = np.stack([np.asarray(strategy.select(t)) for t in ts]).astype(np.int32)
-            phis = np.zeros(r, np.float32)
-            # the selected cohorts are known, so per-round masks (Dropout)
-            # and per-leaf freeze flags (TimelyFL) are materialized host-side
-            # — pure re-invocation with the shape template — and ride into
-            # the scan as stacked (R, P, ...) inputs
-            sel_cfgs = [
-                [strategy.client_config(t, int(cid), params) for cid in host_ids[i]]
-                for i, t in enumerate(ts)
-            ]
-            mask_rounds = [
-                stack_variant_trees([c.mask for c in row], params) for row in sel_cfgs
-            ]
-            has_mask = any(flag for _, flag in mask_rounds)
-            if has_mask:
-                ones = jax.tree_util.tree_map(
-                    lambda l: jnp.ones((strategy.p,) + l.shape, l.dtype), params
-                )
-                mask_xs = jax.tree_util.tree_map(
-                    lambda *ls: jnp.stack(ls),
-                    *[mt if flag else ones for mt, flag in mask_rounds],
-                )
-            else:
-                mask_xs = {}
-            freeze_rounds = [
-                stack_freeze_flags(params, [c.freeze_frac for c in row])
-                for row in sel_cfgs
-            ]
-        else:
-            # device-side selection: the cohort is unknown at chunk build, so
-            # per-round host-built variants cannot be gathered for it.  The
-            # mask check re-invokes client_config with the template for every
-            # (t, cid) — cheap for a legitimate device-select strategy (its
-            # configs are metadata-only), and the cost of a misuse is paid in
-            # an error, not silence.
+        # both the mesh chunks and device-side selection forbid per-cohort
+        # variants — one O(R·M) sweep establishes the invariant for either
+        # (cheap for a compliant strategy: its configs are metadata-only,
+        # and misuse costs an error, not silence)
+        if mesh is not None or program.select is not None:
             if any(
                 cfg.freeze_frac for row in cfg_grid for cfg in row
             ) or any(
@@ -297,26 +400,86 @@ def run_scan_driver(
                 for t in ts for cid in range(m)
             ):
                 raise ValueError(
-                    f"{strategy.name} uses device-side selection, so per-round "
-                    "masks/freeze flags cannot be precomputed for the selected "
-                    "cohort (host-precomputable selection is required)"
+                    f"{strategy.name} uses per-client masks or freeze flags; "
+                    + ("the mesh-sharded chunks need metadata-only configs "
+                       "(supports_sharded_scan must be False)"
+                       if mesh is not None else
+                       "with device-side selection they cannot be precomputed "
+                       "for the selected cohort (host-precomputable selection "
+                       "is required)")
                 )
+
+        # batch schedules from the SAME fold-in streams the loop engines use
+        sched = build_chunk_schedule(
+            store.sizes_host, epochs, batch_size, t0,
+            lambda t, cid: client_batch_rng(seed, t, cid),
+            cache_key=seed,
+        )
+        if program.select is None:
+            host_ids = np.stack([np.asarray(strategy.select(t)) for t in ts]).astype(np.int32)
+            phis = np.zeros(r, np.float32)
+            # the selected cohorts are known, so per-round masks (Dropout)
+            # and per-leaf freeze flags (TimelyFL) are materialized host-side
+            # — pure re-invocation with the shape template — and ride into
+            # the scan as stacked (R, P, ...) inputs.  The mesh chunks take
+            # neither (validated above): their variant inputs are all-pass.
+            if mesh is not None:
+                has_mask = False
+                mask_xs = {}
+                freeze_rounds = [
+                    stack_freeze_flags(params, [0.0] * runner.p_pad) for _ in ts
+                ]
+            else:
+                sel_cfgs = [
+                    [strategy.client_config(t, int(cid), params) for cid in host_ids[i]]
+                    for i, t in enumerate(ts)
+                ]
+                mask_rounds = [
+                    stack_variant_trees([c.mask for c in row], params) for row in sel_cfgs
+                ]
+                has_mask = any(flag for _, flag in mask_rounds)
+                if has_mask:
+                    ones = jax.tree_util.tree_map(
+                        lambda l: jnp.ones((strategy.p,) + l.shape, l.dtype), params
+                    )
+                    mask_xs = jax.tree_util.tree_map(
+                        lambda *ls: jnp.stack(ls),
+                        *[mt if flag else ones for mt, flag in mask_rounds],
+                    )
+                else:
+                    mask_xs = {}
+                freeze_rounds = [
+                    stack_freeze_flags(params, [c.freeze_frac for c in row])
+                    for row in sel_cfgs
+                ]
+        else:
+            # device-side selection: the cohort is unknown at chunk build, so
+            # per-round host-built variants cannot be gathered for it (no
+            # masks/freeze — established by the shared sweep above)
             host_ids = np.zeros((r, strategy.p), np.int32)
             phis = program.explore_phis(np.asarray(ts))
             has_mask = False
             mask_xs = {}
             freeze_rounds = [
-                stack_freeze_flags(params, [0.0] * strategy.p) for _ in ts
+                stack_freeze_flags(params, [0.0] * runner.p_pad) for _ in ts
             ]
         freeze_xs = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *freeze_rounds)
 
+        if mesh is None:
+            bi_xs = jnp.asarray(sched.batch_idx)
+            sw_xs = jnp.asarray(sched.sample_w)
+            sv_xs = jnp.asarray(sched.step_valid)
+        else:
+            # index schedules live data-axis-sharded, like the store rows
+            # they index into — no replication of the O(R·M·S·B) tensors
+            bi_xs, sw_xs, sv_xs = shard_schedule(sched, mesh)
         xs = (
             jnp.arange(t0, t0 + r, dtype=jnp.int32),
             jnp.asarray(phis),
             jnp.asarray(host_ids),
-            jnp.asarray(sched.batch_idx),
-            jnp.asarray(sched.sample_w),
-            jnp.asarray(sched.step_valid),
+            bi_xs,
+            sw_xs,
+            sv_xs,
             jnp.asarray(prox),
             mask_xs,
             freeze_xs,

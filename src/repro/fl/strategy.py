@@ -154,6 +154,30 @@ class Strategy:
     loop driver (see ``docs/support-matrix.md``).
     """
 
+    supports_sharded_scan: bool = False
+    """True ⇒ ``driver="scan"`` also composes with ``engine="sharded"``.
+
+    The mesh chunk (``repro.fl.scan_driver``) compiles whole round chunks
+    into one ``lax.scan`` program whose body shard_maps cohort training over
+    the mesh ``data`` axis and keeps the flat round buffers — and the
+    strategy's scan carry — D-sharded across rounds.  On top of
+    ``supports_scan`` (which is still required) this promises:
+
+    * configs are metadata-only everywhere: no dropout masks and no
+      ``freeze_frac`` (the mesh chunk never materializes per-cohort variant
+      pytrees; violations are rejected at chunk build);
+    * no ``update_transform``: the transform contract operates on the
+      replicated flat matrix, and its Pallas row kernels are not partitioned
+      across the D-shards (rejected at dispatch);
+    * any O(D) scan-carry state is mesh-bindable: ``bind_mesh`` is called
+      before ``scan_program()``, and the carry functions must consume/produce
+      the D-sharded layouts (FLrce's server does this via the cached
+      ``sharded_relationship_dots`` / ``sharded_gram`` programs).
+
+    Strategies that keep the default False fall back to the sharded *loop*
+    driver under ``driver="scan", engine="sharded"``.
+    """
+
     def scan_program(self) -> ScanProgram:
         """The strategy's device-functional pieces for the scan driver.
 

@@ -38,13 +38,20 @@ END_MARKER = "<!-- END GENERATED MATRIX -->"
 
 _HEADER = (
     "| Strategy | `driver=\"loop\"` (sequential / batched / sharded) | "
-    "`driver=\"scan\"` (engine=batched) | Device update transform |\n"
-    "| --- | --- | --- | --- |"
+    "`driver=\"scan\"` (engine=batched) | `driver=\"scan\"` (engine=sharded) | "
+    "Device update transform |\n"
+    "| --- | --- | --- | --- | --- |"
 )
 
 
 def _scan_cell(cls: Type[Strategy]) -> str:
     return "compiled" if cls.supports_scan else "falls back to batched loop"
+
+
+def _sharded_scan_cell(cls: Type[Strategy]) -> str:
+    return (
+        "compiled" if cls.supports_sharded_scan else "falls back to sharded loop"
+    )
 
 
 def _transform_cell(cls: Type[Strategy]) -> str:
@@ -56,13 +63,18 @@ def render_support_matrix() -> str:
     rows = [_HEADER]
     for cls in STRATEGY_CLASSES:
         rows.append(
-            f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | {_transform_cell(cls)} |"
+            f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | "
+            f"{_sharded_scan_cell(cls)} | {_transform_cell(cls)} |"
         )
     return "\n".join(rows)
 
 
 def scan_capable_names() -> List[str]:
     return [cls.name for cls in STRATEGY_CLASSES if cls.supports_scan]
+
+
+def sharded_scan_capable_names() -> List[str]:
+    return [cls.name for cls in STRATEGY_CLASSES if cls.supports_sharded_scan]
 
 
 if __name__ == "__main__":

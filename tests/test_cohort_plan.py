@@ -131,3 +131,104 @@ def test_cohort_plan_input_validation():
     data = _clients(rng, [4, 4])
     with pytest.raises(ValueError, match="per-client rngs"):
         build_cohort_plan(data, [1, 1], 8, [np.random.default_rng(0)])
+
+
+# ---------------------------------------------------------------------------
+# build_chunk_schedule: vectorized builder ≡ reference loops, permutation memo
+# ---------------------------------------------------------------------------
+def _reference_chunk_schedule(sizes, epochs, batch_size, t0, rng_for,
+                              bucket_steps=True):
+    """The pre-vectorization builder, kept verbatim as the bitwise oracle."""
+    from repro.data.loader import bucket_steps as _bucket
+
+    sizes = np.asarray(sizes)
+    epochs = np.asarray(epochs)
+    r_rounds, m = epochs.shape
+    per_round = []
+    s_max = 1
+    for r in range(r_rounds):
+        t = t0 + r
+        per_client = []
+        for cid in range(m):
+            n = int(sizes[cid])
+            e = max(1, int(epochs[r, cid]))
+            nb = -(-n // batch_size) if n else 0
+            s_k = e * nb
+            idx = np.zeros((s_k, batch_size), np.int32)
+            w = np.zeros((s_k, batch_size), np.float32)
+            rng_k = rng_for(t, cid)
+            s = 0
+            for _ in range(e):
+                order = rng_k.permutation(n)
+                for start in range(0, n, batch_size):
+                    ix = order[start : start + batch_size]
+                    idx[s, : len(ix)] = ix
+                    w[s, : len(ix)] = 1.0
+                    s += 1
+            per_client.append((idx, w, s_k))
+            s_max = max(s_max, s_k)
+        per_round.append(per_client)
+    s_pad = _bucket(s_max) if bucket_steps else s_max
+    batch_idx = np.zeros((r_rounds, m, s_pad, batch_size), np.int32)
+    sample_w = np.zeros((r_rounds, m, s_pad, batch_size), np.float32)
+    step_valid = np.zeros((r_rounds, m, s_pad), np.float32)
+    for r, per_client in enumerate(per_round):
+        for cid, (idx, w, s_k) in enumerate(per_client):
+            batch_idx[r, cid, :s_k] = idx
+            sample_w[r, cid, :s_k] = w
+            step_valid[r, cid, :s_k] = 1.0
+    return batch_idx, sample_w, step_valid
+
+
+@pytest.mark.parametrize("sizes,batch", [
+    ([20, 7, 33, 0, 1], 8),      # ragged, empty shard, single sample
+    ([16, 16], 16),              # exact batches, no partial tail
+    ([5], 8),                    # one partial batch only
+])
+def test_chunk_schedule_bitwise_equals_reference(sizes, batch):
+    """The vectorized pad+reshape builder must reproduce the per-batch loop
+    reference EXACTLY — same fold-in stream consumption, same padding."""
+    from repro.data.device import build_chunk_schedule
+
+    epochs = np.asarray([[3, 1, 2, 1, 4][: len(sizes)],
+                         [1, 2, 1, 1, 1][: len(sizes)]], np.int32)
+    rng_for = lambda t, cid: client_batch_rng(11, t, cid)
+    sched = build_chunk_schedule(np.asarray(sizes), epochs, batch, 5, rng_for)
+    bi, sw, sv = _reference_chunk_schedule(np.asarray(sizes), epochs, batch, 5, rng_for)
+    np.testing.assert_array_equal(sched.batch_idx, bi)
+    np.testing.assert_array_equal(sched.sample_w, sw)
+    np.testing.assert_array_equal(sched.step_valid, sv)
+
+
+def test_chunk_schedule_memo_skips_redraws_and_stays_bitwise():
+    """With cache_key set, a repeat build neither re-invokes the fold-in
+    streams nor changes a single bit of the schedule tensors."""
+    from repro.data.device import build_chunk_schedule, clear_schedule_memo
+
+    clear_schedule_memo()
+    sizes = np.asarray([12, 5, 9])
+    epochs = np.full((3, 3), 2, np.int32)
+    calls = []
+
+    def rng_for(t, cid):
+        calls.append((t, cid))
+        return client_batch_rng(23, t, cid)
+
+    first = build_chunk_schedule(sizes, epochs, 4, 0, rng_for, cache_key=23)
+    n_calls = len(calls)
+    assert n_calls == 9                       # every (t, cid) drawn once
+    second = build_chunk_schedule(sizes, epochs, 4, 0, rng_for, cache_key=23)
+    assert len(calls) == n_calls              # memo hit: no stream touched
+    np.testing.assert_array_equal(first.batch_idx, second.batch_idx)
+    np.testing.assert_array_equal(first.sample_w, second.sample_w)
+    np.testing.assert_array_equal(first.step_valid, second.step_valid)
+    # a different cache key must not leak entries across jobs
+    build_chunk_schedule(sizes, epochs, 4, 0,
+                         lambda t, cid: client_batch_rng(24, t, cid),
+                         cache_key=24)
+    assert len(calls) == n_calls              # new key, new streams — but the
+    # spy rng_for was not used, proving the key (not the callable) scopes it
+    # without cache_key there is no memoization at all
+    build_chunk_schedule(sizes, epochs, 4, 0, rng_for)
+    assert len(calls) == 2 * n_calls
+    clear_schedule_memo()

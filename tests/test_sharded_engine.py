@@ -368,3 +368,59 @@ def test_three_engine_equivalence_subprocess():
     )
     assert out.returncode == 0, out.stderr[-4000:]
     assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]
+
+
+# ---------------------------------------------------------------------------
+# per-job program caches: resolved once, hit every following round
+# ---------------------------------------------------------------------------
+def test_sharded_trainer_program_caches_hit_across_rounds(tiny_fed):
+    """PR-5 regression: the sharded engine used to rebuild shard_map programs
+    per round (the dominant per-round cost).  Three rounds through the same
+    trainer must miss each cache exactly once and hit it afterwards."""
+    ds, model = tiny_fed
+    mesh = make_engine_mesh()               # (1, 1) on one device — cache
+    trainer = ShardedCohortTrainer(model, 0.1, 16, mesh)   # behavior is the same
+    params = model.init(jax.random.PRNGKey(0))
+    dim = param_count(params)
+    trainer.prepare_job(3, dim)             # what run_federated does at setup
+    assert trainer.reshard_cache_misses == 1
+    ids = [0, 1, 2]
+    for t in range(3):
+        plan = build_cohort_plan(
+            [ds.client_data(c) for c in ids], [1, 1, 1], 16,
+            [client_batch_rng(0, t, c) for c in ids],
+        )
+        trainer.train_cohort(params, plan, prox_mus=[0.0] * 3,
+                             masks=[None] * 3, freeze_fracs=[0.0] * 3)
+    assert trainer.train_cache_misses == 1
+    assert trainer.train_cache_hits == 2
+    assert trainer.reshard_cache_misses == 1     # prepare_job's one build
+    assert trainer.reshard_cache_hits == 3       # every round a pure hit
+
+
+def test_distributed_reduction_programs_are_cached_per_mesh():
+    """sharded_gram/cross_gram/aggregate/relationship_dots resolve through an
+    lru_cache keyed by (mesh, axes): repeat calls — the round loop — must not
+    rebuild (and re-trace) the shard_map program."""
+    from repro.core.distributed import (
+        _aggregate_program,
+        _gram_program,
+        sharded_aggregate,
+        sharded_gram,
+    )
+
+    mesh = make_engine_mesh()
+    axes = ("data", "model")
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(3, 24)), jnp.float32)
+    w = jnp.zeros(24, jnp.float32)
+    weights = jnp.full(3, 1 / 3, jnp.float32)
+
+    base_gram = _gram_program.cache_info().misses
+    base_agg = _aggregate_program.cache_info().misses
+    for _ in range(3):
+        sharded_gram(u, mesh, axes)
+        sharded_aggregate(w, u, weights, mesh, axes)
+    assert _gram_program.cache_info().misses <= base_gram + 1
+    assert _aggregate_program.cache_info().misses <= base_agg + 1
+    assert _gram_program.cache_info().hits >= 2
+    assert _aggregate_program.cache_info().hits >= 2

@@ -65,6 +65,17 @@ def test_all_section41_baselines_support_scan_except_pyramidfl():
     }
 
 
+def test_sharded_scan_support_axis():
+    """The mesh-chunk contract (metadata-only configs, no transform) holds
+    exactly for FLrce, FedAvg and Fedprox; everything else falls back to the
+    sharded loop and the rendered matrix says so."""
+    from repro.fl.support_matrix import sharded_scan_capable_names
+
+    assert sharded_scan_capable_names() == ["flrce", "fedavg", "fedprox"]
+    for cls in (Fedcom, QuantizedFL, Dropout, TimelyFL, PyramidFL):
+        assert not cls.supports_sharded_scan, cls.name
+
+
 # ---------------------------------------------------------------------------
 # docs/writing-a-strategy.md worked example passes the equivalence harness
 # ---------------------------------------------------------------------------
