@@ -131,6 +131,25 @@ def get_result(name: str, psi: Optional[float] = None) -> FLResult:
     return res
 
 
+def per_round_wall(res: FLResult, warmup_rounds: int = 1) -> float:
+    """Mean per-round wall time EXCLUDING the compile-heavy warmup rounds.
+
+    The first round (loop drivers) or first chunk (scan driver) pays jit
+    tracing + XLA compilation — often 100× a steady-state round on the small
+    benchmark configs — so timing from job wall-clock understates every
+    speedup.  Callers pass ``warmup_rounds=1`` for a loop driver and the
+    chunk size for the scan driver (its program compiles once, on chunk 0).
+    Falls back to all rounds when the run is shorter than the warmup.
+    """
+    recs = res.records[warmup_rounds:] if len(res.records) > warmup_rounds else res.records
+    return float(np.mean([r.wall_s for r in recs]))
+
+
+def bench_warmup_rounds() -> int:
+    """The warmup to exclude for the configured REPRO_BENCH_DRIVER."""
+    return 8 if os.environ.get("REPRO_BENCH_DRIVER") == "scan" else 1
+
+
 def dump_summary(path: str = None) -> dict:
     path = path or os.path.join(RESULTS_DIR, "bench_fl_summary.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)

@@ -15,30 +15,45 @@ steps each) and writes machine-readable throughput to ``BENCH_engine.json``.
 The smoke mode also times a compressed-strategy leg (Fedcom, whose
 device-resident top-k update transform runs inside the compiled chunk), so
 ``BENCH_engine.json`` tracks the transform overhead under the scan driver
-(`batched_fedcom` / `scan_fedcom` entries), and a `sharded_scan` leg
+(`batched_fedcom` / `scan_fedcom` entries), a `sharded_scan` leg
 (driver="scan" × engine="sharded": the whole chunk fused on the mesh) timed
 against the sharded loop engine over the same rounds
-(`sharded_scan_speedup_vs_sharded`).
+(`sharded_scan_speedup_vs_sharded`), and `pipelined` / `sharded_pipelined`
+legs (the scan driver's two-deep chunk pipeline: next-chunk build + H2D +
+dispatch overlapped with the current chunk's execution) timed against the
+serial scan driver (`pipeline_speedup_vs_scan` /
+`sharded_pipeline_speedup_vs_sharded_scan`) with record equivalence
+asserted EXACTLY (same compiled program, only host scheduling differs).
+Every scan leg also reports its host/device time split from
+``FLResult.driver_stats`` (`driver_stats` + `host_fraction` — the fraction
+of wall time the host spent building/flushing rather than the device
+computing), which is the quantity pipelining hides.
 
 Force a real multi-device mesh on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the sharded engine
 also runs — and is verified — on a single-device (1, 1) mesh).
 
 Warmup/compile exclusion: each loop engine drops its first round; the scan
-driver drops its first whole chunk (the chunk program compiles once).  The
-acceptance bar (batched ≥2× sequential on CPU) is unchanged; the sharded
-engine is reported, not gated — on host CPU the collectives are emulated.
-The scan driver's advantage is largest in the dispatch-bound regime (small
-cohorts / short rounds — the CI smoke config); its magnitude is host
-dependent (~1.5× on a 2-core container, ~3× with more idle cores), so the
-smoke only warns if scan is ever SLOWER than the batched loop.  On the
-compute-bound 16×50 cohort the jitted training program is the floor and the
-measured gain is smaller.
+driver drops its first whole chunk (the chunk program compiles once) — via
+``benchmarks.common.per_round_wall``, which all figure benchmarks share.
+The acceptance bar (batched ≥2× sequential on CPU) is unchanged; the
+sharded engine is reported, not gated — on host CPU the collectives are
+emulated.  The scan driver's advantage is largest in the dispatch-bound
+regime (small cohorts / short rounds — the CI smoke config); its magnitude
+is host dependent (~1.5× on a 2-core container, ~3× with more idle cores),
+so the smoke only warns if scan is ever SLOWER than the batched loop.  The
+same applies to the pipeline: overlapping host and device work needs at
+least two cores (`cpu_cores` is recorded in the report) — on a single-core
+container the pipelined and serial drivers tie, on multi-core CI runners
+the pipeline hides the host fraction and shows ≥1.2× in the dispatch-bound
+smoke config.  On the compute-bound 16×50 cohort the jitted training
+program is the floor and every gain is smaller.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -68,7 +83,16 @@ def _dataset(num_clients: int, samples_per_client: int):
 
 def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
         epochs: int = EPOCHS, driver: str = "loop", chunk: int = 8,
-        warmup: int = 1, strategy_fn=None):
+        warmup: int = 1, strategy_fn=None, pipeline=None):
+    try:
+        from benchmarks.common import per_round_wall
+    except ImportError:
+        # invoked as `python benchmarks/engine.py`: the repo root is not on
+        # sys.path (only benchmarks/ is), so the package import needs it
+        sys.path.insert(
+            0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        )
+        from benchmarks.common import per_round_wall
     from repro.fl import run_federated
     from repro.fl.baselines import FedAvg
 
@@ -79,12 +103,45 @@ def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
         model, ds, strategy_fn(),
         max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
         engine=engine, driver=driver, scan_chunk_rounds=chunk,
+        pipeline=pipeline,
     )
     wall = time.time() - t0
     # exclude the compile-heavy warmup rounds (unless nothing would remain)
-    timed = res.records[warmup:] if len(res.records) > warmup else res.records
-    per_round = float(np.mean([r.wall_s for r in timed]))
+    per_round = per_round_wall(res, warmup)
     return res, wall, per_round
+
+
+def _host_split(res) -> dict:
+    """A scan leg's host/device wall partition from driver_stats.
+
+    ``host_fraction`` is the share of total wall the host spent building
+    schedules + dispatching and flushing records instead of waiting on the
+    device — the serial overhead the pipeline overlaps away;
+    ``device_stall_fraction`` is the share spent blocked in ``device_get``.
+    """
+    st = res.driver_stats
+    if not st or not st.get("total_s"):
+        return {}
+    total = st["total_s"]
+    return {
+        "driver_stats": st,
+        "host_fraction": (st["host_build_s"] + st["host_flush_s"]) / total,
+        "device_stall_fraction": st["device_wait_s"] / total,
+    }
+
+
+def _assert_pipelined_identical(ser, pip, leg: str):
+    """Pipelined ≡ serial must be EXACT: same compiled chunk program, same
+    schedule streams — only the host's dispatch order differs."""
+    assert pip.rounds_run == ser.rounds_run, leg
+    assert [r.selected for r in ser.records] == \
+           [r.selected for r in pip.records], leg
+    assert [r.accuracy for r in ser.records] == \
+           [r.accuracy for r in pip.records], leg
+    assert [r.stopped for r in ser.records] == \
+           [r.stopped for r in pip.records], leg
+    assert ser.ledger.total_bytes == pip.ledger.total_bytes, leg
+    assert ser.ledger.energy_j == pip.ledger.energy_j, leg
 
 
 def write_report(path: str, per_round: dict, meta: dict) -> None:
@@ -133,13 +190,27 @@ def main(argv=None) -> int:
         assert res_bat.records[-1].evaluated
         res_scan, _, per_round["scan"] = run(
             "batched", ds, model, scan_rounds, clients=4, epochs=1,
-            driver="scan", chunk=chunk, warmup=chunk)
+            driver="scan", chunk=chunk, warmup=chunk, pipeline=False)
         assert res_scan.rounds_run == scan_rounds, res_scan.rounds_run
         assert [r.selected for r in res_bat.records] == \
                [r.selected for r in res_scan.records]
         assert abs(res_bat.final_accuracy - res_scan.final_accuracy) < 2e-3, (
             res_bat.final_accuracy, res_scan.final_accuracy)
         speedup = per_round["batched"] / per_round["scan"]
+
+        # pipelined chunk driver: the same compiled chunks with next-chunk
+        # build/H2D/dispatch overlapped against device execution.  Records
+        # must equal the serial scan driver's EXACTLY.
+        res_pip, _, per_round["pipelined"] = run(
+            "batched", ds, model, scan_rounds, clients=4, epochs=1,
+            driver="scan", chunk=chunk, warmup=chunk, pipeline=True)
+        _assert_pipelined_identical(res_scan, res_pip, "pipelined")
+        assert res_pip.driver_stats["speculative_chunks"] > 0
+        speedup_pip = per_round["scan"] / per_round["pipelined"]
+        host_split = {
+            "scan": _host_split(res_scan),
+            "pipelined": _host_split(res_pip),
+        }
 
         # mesh-sharded compiled chunks: driver="scan" x engine="sharded".
         # The sharded loop pays a Python round trip + per-round shard_map
@@ -153,7 +224,7 @@ def main(argv=None) -> int:
             res_bat.final_accuracy, res_shl.final_accuracy)
         res_shs, _, per_round["sharded_scan"] = run(
             "sharded", ds, model, scan_rounds, clients=4, epochs=1,
-            driver="scan", chunk=chunk, warmup=chunk)
+            driver="scan", chunk=chunk, warmup=chunk, pipeline=False)
         assert res_shs.rounds_run == scan_rounds, res_shs.rounds_run
         assert [r.selected for r in res_shl.records] == \
                [r.selected for r in res_shs.records]
@@ -161,6 +232,17 @@ def main(argv=None) -> int:
             res_shl.final_accuracy, res_shs.final_accuracy)
         assert res_shl.ledger.total_bytes == res_shs.ledger.total_bytes
         speedup_sh = per_round["sharded"] / per_round["sharded_scan"]
+
+        # sharded pipeline: the donated D-sharded carries alternate between
+        # the two in-flight chunk programs, sharded schedule uploads double-
+        # buffer — records must still equal the serial sharded chunks exactly
+        res_shp, _, per_round["sharded_pipelined"] = run(
+            "sharded", ds, model, scan_rounds, clients=4, epochs=1,
+            driver="scan", chunk=chunk, warmup=chunk, pipeline=True)
+        _assert_pipelined_identical(res_shs, res_shp, "sharded_pipelined")
+        speedup_shp = per_round["sharded_scan"] / per_round["sharded_pipelined"]
+        host_split["sharded_scan"] = _host_split(res_shs)
+        host_split["sharded_pipelined"] = _host_split(res_shp)
 
         # compressed-strategy leg: the device-resident update transform
         # (Fedcom top-k through the Pallas row kernel) must not cost the scan
@@ -186,13 +268,21 @@ def main(argv=None) -> int:
         write_report(args.out, per_round,
                      {"mode": "smoke", "clients": 4, "steps": 4,
                       "scan_chunk_rounds": chunk,
+                      "cpu_cores": len(os.sched_getaffinity(0)),
                       "scan_speedup_vs_batched": speedup,
                       "scan_speedup_vs_batched_fedcom": speedup_c,
-                      "sharded_scan_speedup_vs_sharded": speedup_sh})
-        print(f"engine-smoke OK: batched+sharded+scan+sharded_scan, "
+                      "sharded_scan_speedup_vs_sharded": speedup_sh,
+                      "pipeline_speedup_vs_scan": speedup_pip,
+                      "sharded_pipeline_speedup_vs_sharded_scan": speedup_shp,
+                      "host_split": host_split})
+        print(f"engine-smoke OK: batched+sharded+scan+sharded_scan+pipelined, "
               f"acc={res_bat.final_accuracy:.3f}, scan {speedup:.2f}x batched, "
               f"fedcom scan {speedup_c:.2f}x batched, "
-              f"sharded_scan {speedup_sh:.2f}x sharded")
+              f"sharded_scan {speedup_sh:.2f}x sharded, "
+              f"pipelined {speedup_pip:.2f}x scan, "
+              f"sharded_pipelined {speedup_shp:.2f}x sharded_scan, "
+              f"host_fraction(scan)="
+              f"{host_split['scan'].get('host_fraction', 0):.2f}")
         # regression signal: the scan driver must never be SLOWER than the
         # batched loop it replaces.  The magnitude of the win is host
         # dependent (measured ~1.5x on a 2-core container, ~3x with more
@@ -206,6 +296,18 @@ def main(argv=None) -> int:
         if speedup_sh < 1.0:
             print("WARNING: sharded compiled chunks slower than the sharded "
                   "loop on the smoke config", file=sys.stderr)
+        # the pipeline needs a core for the host while the device computes:
+        # on a single-core container the two drivers tie (the overlap has
+        # nowhere to run), so the ≥1.2x expectation only applies multi-core
+        if speedup_pip < 1.0:
+            print("WARNING: pipelined chunk driver slower than the serial "
+                  "scan driver on the smoke config", file=sys.stderr)
+        elif speedup_pip < 1.2 and len(os.sched_getaffinity(0)) > 1:
+            print(f"WARNING: pipelined speedup {speedup_pip:.2f}x below the "
+                  "1.2x multi-core expectation", file=sys.stderr)
+        if speedup_shp < 1.0:
+            print("WARNING: sharded pipelined chunks slower than the serial "
+                  "sharded chunks on the smoke config", file=sys.stderr)
         return 0
 
     ds = _dataset(CLIENTS, SAMPLES_PER_CLIENT)
@@ -217,21 +319,33 @@ def main(argv=None) -> int:
         _, _, per_round[engine] = run(engine, ds, model, args.rounds)
         print(f"{engine + ':':12s}{per_round[engine] * 1e3:8.1f} ms/round")
     # scan driver: chunks of args.rounds; the first chunk is compile warmup
-    _, _, per_round["scan"] = run(
+    res_scan, _, per_round["scan"] = run(
         "batched", ds, model, args.rounds * 3, driver="scan",
-        chunk=args.rounds, warmup=args.rounds)
+        chunk=args.rounds, warmup=args.rounds, pipeline=False)
     print(f"{'scan:':12s}{per_round['scan'] * 1e3:8.1f} ms/round")
+    res_pip, _, per_round["pipelined"] = run(
+        "batched", ds, model, args.rounds * 3, driver="scan",
+        chunk=args.rounds, warmup=args.rounds, pipeline=True)
+    _assert_pipelined_identical(res_scan, res_pip, "pipelined")
+    print(f"{'pipelined:':12s}{per_round['pipelined'] * 1e3:8.1f} ms/round")
     speedup = per_round["sequential"] / per_round["batched"]
     print(f"batched speedup: {speedup:8.2f}x")
     print(f"sharded vs batched: "
           f"{per_round['batched'] / per_round['sharded']:8.2f}x")
     print(f"scan vs batched: "
           f"{per_round['batched'] / per_round['scan']:8.2f}x")
+    print(f"pipelined vs scan: "
+          f"{per_round['scan'] / per_round['pipelined']:8.2f}x")
     write_report(args.out, per_round,
                  {"mode": "timed", "clients": CLIENTS, "steps": steps,
                   "scan_chunk_rounds": args.rounds,
+                  "cpu_cores": len(os.sched_getaffinity(0)),
                   "scan_speedup_vs_batched":
-                      per_round["batched"] / per_round["scan"]})
+                      per_round["batched"] / per_round["scan"],
+                  "pipeline_speedup_vs_scan":
+                      per_round["scan"] / per_round["pipelined"],
+                  "host_split": {"scan": _host_split(res_scan),
+                                 "pipelined": _host_split(res_pip)}})
     if speedup < 2.0:
         print("WARNING: batched engine below the 2x acceptance bar", file=sys.stderr)
         return 1

@@ -15,18 +15,20 @@ every strategy except PyramidFL executes as compiled round chunks.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import STRATEGIES, csv_row, get_result, setup
+from benchmarks.common import (
+    STRATEGIES, bench_warmup_rounds, csv_row, get_result, per_round_wall, setup,
+)
 
 
 def main() -> list:
     rows = []
     cfg, _, _, _ = setup()
+    warmup = bench_warmup_rounds()
     for name in STRATEGIES:
-        t0 = time.time()
         res = get_result(name)
-        wall = (time.time() - t0) * 1e6 / max(1, res.rounds_run)
+        # steady-state per-round wall time: the first round (loop) or first
+        # chunk (scan) pays compilation and is excluded from the mean
+        wall = per_round_wall(res, warmup) * 1e6
         rows.append(csv_row(
             f"table3_{name}", wall,
             f"acc={res.final_accuracy:.4f};rounds={res.rounds_run}/{cfg.t};"

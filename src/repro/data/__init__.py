@@ -4,6 +4,7 @@ from repro.data.device import (
     DeviceClientStore,
     build_chunk_schedule,
     clear_schedule_memo,
+    place_schedule,
     shard_schedule,
 )
 from repro.data.loader import epoch_batches, num_batches
@@ -25,6 +26,7 @@ __all__ = [
     "DeviceClientStore",
     "build_chunk_schedule",
     "clear_schedule_memo",
+    "place_schedule",
     "shard_schedule",
     "epoch_batches",
     "num_batches",

@@ -183,6 +183,28 @@ def shard_schedule(
     return place(sched.batch_idx), place(sched.sample_w), place(sched.step_valid)
 
 
+def place_schedule(
+    sched: ChunkSchedule, mesh=None, data_axis: str = "data"
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Place a chunk's index tensors on device, mesh-aware.
+
+    With ``mesh`` this is :func:`shard_schedule`; without, a plain async
+    ``jax.device_put`` of the three host arrays.  Either way each call
+    allocates FRESH device buffers — the pipelined chunk driver relies on
+    that for double-buffering: chunk k+1's transfers (dispatched while chunk
+    k executes) can never alias schedule tensors an in-flight chunk still
+    reads, and the copies themselves are asynchronous, so building+placing
+    the next chunk overlaps the current chunk's device compute.
+    """
+    if mesh is not None:
+        return shard_schedule(sched, mesh, data_axis)
+    return (
+        jax.device_put(sched.batch_idx),
+        jax.device_put(sched.sample_w),
+        jax.device_put(sched.step_valid),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Chunk schedule building (host)
 # ---------------------------------------------------------------------------

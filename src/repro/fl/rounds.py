@@ -32,7 +32,11 @@ executes:
   sync per round.  Works with every engine and strategy.
 * ``driver="scan"`` — whole chunks of rounds compile into one ``lax.scan``
   program over a device-resident, donated carry; the host syncs once per
-  chunk (``repro.fl.scan_driver``).  Composes with ``engine="batched"``
+  chunk (``repro.fl.scan_driver``).  By default the chunk loop is pipelined
+  (``pipeline=True``): the next chunk is built, transferred and dispatched
+  while the current chunk executes, hiding the host flush behind device
+  compute; ``pipeline=False`` is the strictly serial chunk loop with
+  bitwise-identical results.  Composes with ``engine="batched"``
   (the fused single-device path) and ``engine="sharded"`` (the same chunk
   with the body shard_mapped over the mesh and every O(D) buffer D-sharded
   across rounds).  Requires a strategy with ``supports_scan`` — FLrce and
@@ -98,6 +102,9 @@ class FLResult:
     stopped_early: bool
     ledger: ResourceLedger
     final_params: PyTree
+    # driver-internal timing/counters (scan driver: chunk counts, speculative
+    # dispatches, host-build/device-wait/host-flush split); empty for "loop"
+    driver_stats: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     @property
     def energy_kj(self) -> float:
@@ -154,6 +161,7 @@ def finalize_result(
     stopped: bool,
     ledger: ResourceLedger,
     final_params: PyTree,
+    driver_stats: Optional[Dict[str, Any]] = None,
 ) -> FLResult:
     """Assemble the FLResult shared by the loop and scan drivers.
 
@@ -173,6 +181,7 @@ def finalize_result(
         stopped_early=stopped,
         ledger=ledger,
         final_params=final_params,
+        driver_stats=driver_stats or {},
     )
 
 
@@ -220,6 +229,7 @@ def run_federated(
     mesh=None,
     driver: str = "loop",
     scan_chunk_rounds: int = 8,
+    pipeline: Optional[bool] = None,
 ) -> FLResult:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
@@ -227,6 +237,11 @@ def run_federated(
         raise ValueError(f"driver must be one of {DRIVERS}, got {driver!r}")
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    if pipeline is not None and driver != "scan":
+        raise ValueError(
+            "pipeline= selects the scan driver's chunk pipelining; it has no "
+            f"meaning for driver={driver!r} (pass driver='scan')"
+        )
     if driver == "scan":
         if engine == "sequential":
             raise ValueError(
@@ -251,6 +266,9 @@ def run_federated(
                 seed=seed, init_params=init_params, verbose=verbose,
                 chunk_rounds=scan_chunk_rounds,
                 mesh=mesh if engine == "sharded" else None,
+                # pipelining is ON by default: overlap the next chunk's
+                # build/H2D/dispatch with the current chunk's execution
+                pipeline=True if pipeline is None else pipeline,
             )
         # host-coupled per-round logic (PyramidFL's loss-driven selection) or
         # a strategy without the mesh-chunk contract (masks/freeze flags,

@@ -1,4 +1,4 @@
-"""Compiled round driver: ``lax.scan`` over whole chunks of rounds.
+"""Compiled round driver: ``lax.scan`` over whole chunks of rounds, pipelined.
 
 The loop drivers dispatch one jitted cohort program per round and sync with
 the host several times per round (plan upload, loss readback, selection,
@@ -17,6 +17,22 @@ models — that dispatch overhead dominates.  This driver removes it:
   outputs (ids, stop flags, accuracies, losses — O(R·P) scalars), flushes
   ``RoundRecord``s and the resource ledger, and checks the stop flag.
 
+**Pipelined chunks** (``pipeline=True``, the default): the remaining serial
+cost is the host work *between* device programs — schedule construction and
+H2D upload before a chunk, record/ledger flush after it.  The driver is a
+two-deep software pipeline over those phases: chunk k+1's inputs are built
+and transferred while chunk k executes, chunk k+1 is dispatched (async — the
+hot path never calls ``block_until_ready``) *before* the host blocks on
+chunk k's outputs, and the flush of chunk k then overlaps chunk k+1's device
+execution.  Because the stop decision for chunk k is only known after chunk
+k+1 is already in flight, dispatch is **speculative**: the ``stopped`` flag
+rides in the donated carry across chunk boundaries, so a chunk entered with
+``stopped=True`` executes fully masked — its output carry is bitwise the
+input carry and every round reports ``valid=False``.  The host discards a
+cancelled chunk's outputs unread; records, ledger and the written-back
+strategy state are bitwise-identical to the serial (``pipeline=False``)
+driver, whose code path is the same loop at pipeline depth 1.
+
 With ``mesh=`` (``run_federated(driver="scan", engine="sharded")``) the same
 chunk program runs mesh-sharded: the scan body shard_maps cohort training
 over the mesh ``data`` axis (the :class:`ShardedCohortTrainer` program), does
@@ -26,7 +42,10 @@ the cached sharded Gram programs (FLrce ingest via
 ``sharded_relationship_dots``, Alg. 3 via ``sharded_gram``).  The flat ``w``
 and the (M, D_pad) maps stay D-sharded across rounds AND across chunks — the
 O(D) state never leaves the mesh, and host traffic stays O(R·P) scalars per
-chunk.
+chunk.  Pipelining composes: each chunk's index schedules are fresh
+data-axis-sharded buffers (double-buffered H2D — transfers for chunk k+1
+overlap chunk k's execution), and the donated D-sharded carries alternate
+between the two in-flight programs exactly like the single-device path.
 
 Numerics match the batched loop driver within fp32 tolerance: batch
 schedules come from the identical ``client_batch_rng`` fold-in streams
@@ -39,7 +58,8 @@ host-materialized per chunk for the (host-precomputed) selected cohorts and
 ride into the scan as stacked per-round inputs.  After an early stop fires
 mid-chunk the remaining scan iterations still execute (a scan has no early
 exit) but their carry writes are masked out, so the final state is the stop
-round's — the wasted rounds are bounded by ``chunk_rounds``.
+round's — the wasted rounds are bounded by ``chunk_rounds`` plus, under
+pipelining, one speculative chunk.
 
 Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()`` — FLrce
 and every §4.1 baseline except PyramidFL, whose loss-driven selection/epoch
@@ -50,7 +70,9 @@ plan cannot be precomputed; the mesh-sharded chunks additionally require
 """
 from __future__ import annotations
 
+import dataclasses
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -58,7 +80,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
-from repro.data.device import DeviceClientStore, build_chunk_schedule, shard_schedule
+from repro.data.device import DeviceClientStore, build_chunk_schedule, place_schedule
 from repro.data.synthetic import FederatedDataset
 from repro.fl.client import (
     BatchedCohortTrainer,
@@ -86,9 +108,9 @@ class _ChunkRunner:
 
     ``mesh=None`` is the single-device path; with a mesh the chunk body runs
     the shard_mapped cohort program and the D-sharded round pipeline.  Either
-    way the chunk carry (flat w, strategy carry, accuracy) is donated: the
-    output buffers alias the inputs, so the O(D)/O(M·D) state updates in
-    place chunk over chunk.
+    way the chunk carry (flat w, strategy carry, stop flag, accuracy) is
+    donated: the output buffers alias the inputs, so the O(D)/O(M·D) state
+    updates in place chunk over chunk.
     """
 
     def __init__(self, model, store: DeviceClientStore, unflatten, program,
@@ -218,7 +240,10 @@ class _ChunkRunner:
             )
 
             # rounds after a stop still execute (scan has no early exit) but
-            # never touch the carry: the final state is the stop round's
+            # never touch the carry: the final state is the stop round's.
+            # ``stopped`` enters the carry at the CHUNK boundary too, so a
+            # speculative chunk dispatched after a stop runs fully masked —
+            # its carry out is bitwise its carry in.
             new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc)
             carry_out = _tree_where(stopped, carry, new_carry)
             out = {
@@ -232,8 +257,8 @@ class _ChunkRunner:
             }
             return carry_out, out
 
-        def chunk(w, sc, last_acc, xs):
-            carry0 = (w, sc, jnp.asarray(False), last_acc)
+        def chunk(w, sc, stopped, last_acc, xs):
+            carry0 = (w, sc, stopped, last_acc)
             (w, sc, stopped, last_acc), outs = jax.lax.scan(body, carry0, xs)
             if carry_shardings is not None:
                 # pin the output carry to the INPUT carry's layouts: without
@@ -241,27 +266,40 @@ class _ChunkRunner:
                 # data-sharded, which changes the next call's jit signature
                 # (one silent full recompile per job) and breaks the donated
                 # in-place aliasing
-                w, sc, last_acc = jax.tree_util.tree_map(
+                w, sc, stopped, last_acc = jax.tree_util.tree_map(
                     jax.lax.with_sharding_constraint,
-                    (w, sc, last_acc), carry_shardings,
+                    (w, sc, stopped, last_acc), carry_shardings,
                 )
-            return w, sc, last_acc, outs
+            return w, sc, stopped, last_acc, outs
 
         # donated carry: the chunk's (D[,_pad]) flat model, the strategy
-        # carry (FLrce's Ω/H and (M, D_pad) V/A maps) and the accuracy
-        # scalar alias their outputs — no per-chunk copy of the O(M·D) state
-        return jax.jit(chunk, donate_argnums=(0, 1, 2))
+        # carry (FLrce's Ω/H and (M, D_pad) V/A maps), the cross-chunk stop
+        # flag and the accuracy scalar alias their outputs — no per-chunk
+        # copy of the O(M·D) state
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
 
-    def run_chunk(self, w, sc, last_acc, xs, use_prox: bool, has_mask: bool):
+    def run_chunk(self, w, sc, stopped, last_acc, xs, use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)
         if key not in self._cache:
             shardings = None
             if self.mesh is not None:
                 shardings = jax.tree_util.tree_map(
-                    lambda l: l.sharding, (w, sc, last_acc)
+                    lambda l: l.sharding, (w, sc, stopped, last_acc)
                 )
             self._cache[key] = self._build(use_prox, has_mask, shardings)
-        return self._cache[key](w, sc, last_acc, xs)
+        return self._cache[key](w, sc, stopped, last_acc, xs)
+
+
+@dataclasses.dataclass
+class _ChunkPlan:
+    """One chunk's host-built inputs, ready for (or already in) flight."""
+
+    t0: int
+    r: int
+    cfg_grid: List[List[Any]]     # (R, M) LocalConfigs — reused at flush
+    xs: Tuple                     # the scan's stacked per-round inputs
+    use_prox: bool
+    has_mask: bool
 
 
 def run_scan_driver(
@@ -279,10 +317,17 @@ def run_scan_driver(
     verbose: bool,
     chunk_rounds: int,
     mesh=None,
+    pipeline: bool = True,
 ):
     """Algorithm 4's outer loop as jitted round chunks.  Called by
     ``run_federated(driver="scan")`` — with ``mesh`` for
-    ``engine="sharded"`` — and returns the same :class:`FLResult`."""
+    ``engine="sharded"`` — and returns the same :class:`FLResult`.
+
+    ``pipeline=True`` (default) runs the chunk loop as a two-deep software
+    pipeline — chunk k+1 is built, transferred and dispatched while the host
+    consumes chunk k — ``pipeline=False`` is the strictly serial
+    build → run → flush loop (same loop at depth 1, bitwise-equal results).
+    """
     from repro.fl.rounds import RoundRecord, finalize_result
 
     if chunk_rounds < 1:
@@ -363,12 +408,17 @@ def run_scan_driver(
     commit = lambda l: l if getattr(l, "committed", False) else jax.device_put(l, rep)
     w = commit(w)
     sc = jax.tree_util.tree_map(commit, sc)
+    es_flag = commit(jnp.asarray(False))   # the cross-chunk stop flag
     last_acc = commit(jnp.float32(0.0))
-    records: List[RoundRecord] = []
-    stopped = False
-    t0 = 0
-    while t0 < max_rounds and not stopped:
-        wall0 = time.time()
+
+    # ------------------------------------------------------------------
+    # host-side chunk phases: build (pre-device) and flush (post-device)
+    # ------------------------------------------------------------------
+    def build_chunk(t0: int) -> _ChunkPlan:
+        """Everything a chunk needs before dispatch: configs, schedules,
+        variant inputs, H2D placement.  Pure host + async transfers — safe
+        to run one chunk ahead of the flush (all of it is a pure function
+        of ``(strategy, seed, t0)``, never of round results)."""
         r = min(chunk_rounds, max_rounds - t0)
         ts = list(range(t0, t0 + r))
 
@@ -465,14 +515,10 @@ def run_scan_driver(
             ]
         freeze_xs = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *freeze_rounds)
 
-        if mesh is None:
-            bi_xs = jnp.asarray(sched.batch_idx)
-            sw_xs = jnp.asarray(sched.sample_w)
-            sv_xs = jnp.asarray(sched.step_valid)
-        else:
-            # index schedules live data-axis-sharded, like the store rows
-            # they index into — no replication of the O(R·M·S·B) tensors
-            bi_xs, sw_xs, sv_xs = shard_schedule(sched, mesh)
+        # fresh device buffers every chunk (double-buffered by construction):
+        # the async H2D copies for chunk k+1 overlap chunk k's execution and
+        # never alias the schedule tensors a running chunk still reads
+        bi_xs, sw_xs, sv_xs = place_schedule(sched, mesh)
         xs = (
             jnp.arange(t0, t0 + r, dtype=jnp.int32),
             jnp.asarray(phis),
@@ -484,20 +530,23 @@ def run_scan_driver(
             mask_xs,
             freeze_xs,
         )
-        w, sc, last_acc, outs = runner.run_chunk(
-            w, sc, last_acc, xs, use_prox, has_mask
-        )
-        outs = jax.device_get(outs)            # the chunk's ONE host sync
+        return _ChunkPlan(t0=t0, r=r, cfg_grid=cfg_grid, xs=xs,
+                          use_prox=use_prox, has_mask=has_mask)
 
-        # --- host flush: ledger + RoundRecords + stop check -----------------
+    records: List[RoundRecord] = []
+
+    def flush_chunk(plan: _ChunkPlan, outs) -> Tuple[int, bool]:
+        """Consume one chunk's host-fetched outputs: ledger + RoundRecords +
+        the stop check.  Returns ``(rounds flushed, chunk stopped)``."""
         flushed = 0
-        for i in range(r):
+        chunk_stopped = False
+        for i in range(plan.r):
             if not outs["valid"][i]:
                 break
-            t = t0 + i
+            t = plan.t0 + i
             ids = [int(c) for c in outs["ids"][i]]
             for cid in ids:
-                cfg = cfg_grid[i][cid]
+                cfg = plan.cfg_grid[i][cid]
                 flops = (
                     model.flops_per_sample() * int(store.sizes_host[cid])
                     * cfg.epochs * cfg.compute_fraction
@@ -526,22 +575,100 @@ def run_scan_driver(
                     f"loss={rec.mean_client_loss:.4f} stop={rec.stopped}"
                 )
             if rec.stopped:
-                stopped = True
+                chunk_stopped = True
                 break
-        # chunk wall (schedule build + compiled chunk + flush bookkeeping,
-        # i.e. everything the loop driver's per-round wall_s covers),
-        # amortized over the flushed rounds
-        wall = time.time() - wall0
+        return flushed, chunk_stopped
+
+    # ------------------------------------------------------------------
+    # the chunk loop: a software pipeline of depth 1 (serial) or 2
+    # ------------------------------------------------------------------
+    # Depth 2 overlaps BOTH host phases with device compute: chunk k+1 is
+    # built + H2D-transferred + dispatched while chunk k executes, and the
+    # host then blocks only on chunk k's outputs (the pipeline's first sync
+    # point) while chunk k+1 runs.  The second sync point is implicit: chunk
+    # k+1's dispatch consumes chunk k's donated carry outputs, so XLA
+    # serializes the two programs on-device without any host wait.  Because
+    # chunk k's stop decision lands after chunk k+1 is dispatched, the
+    # dispatch is speculative — the carried stop flag makes a post-stop chunk
+    # a bitwise no-op (all rounds valid=False), and its outputs are dropped
+    # here unread, so truncation recovers the serial driver's exact records,
+    # ledger and write-back state.
+    depth = 2 if pipeline else 1
+    stats: Dict[str, Any] = {
+        "driver": "scan",
+        "pipeline": bool(pipeline),
+        "chunks": 0,
+        "speculative_chunks": 0,
+        "cancelled_chunks": 0,
+        "host_build_s": 0.0,
+        "device_wait_s": 0.0,
+        "host_flush_s": 0.0,
+        "total_s": 0.0,
+    }
+    pending: "deque[Tuple[_ChunkPlan, Any]]" = deque()
+    stopped = False
+    any_flushed = False
+    last_exploit = False
+    t_final = 0
+    t_dispatch = 0
+    t_start = time.time()
+    flush_mark = t_start
+    while pending or (t_dispatch < max_rounds and not stopped):
+        # fill the pipeline: build chunk inputs (host), place them (async
+        # H2D) and dispatch (async) — never blocking on in-flight chunks
+        while len(pending) < depth and t_dispatch < max_rounds and not stopped:
+            b0 = time.time()
+            plan = build_chunk(t_dispatch)
+            w, sc, es_flag, last_acc, outs = runner.run_chunk(
+                w, sc, es_flag, last_acc, plan.xs, plan.use_prox, plan.has_mask
+            )
+            stats["host_build_s"] += time.time() - b0
+            if pending:
+                stats["speculative_chunks"] += 1
+            pending.append((plan, outs))
+            t_dispatch += plan.r
+
+        plan, outs = pending.popleft()
+        w0 = time.time()
+        outs = jax.device_get(outs)            # the chunk's ONE host sync
+        stats["device_wait_s"] += time.time() - w0
+
+        f0 = time.time()
+        flushed, chunk_stopped = flush_chunk(plan, outs)
+        if flushed:
+            any_flushed = True
+            last_exploit = bool(outs["exploited"][flushed - 1])
+            t_final = plan.t0 + flushed
+        # chunk wall: everything since the previous flush completed
+        # (schedule build + compiled chunk + flush bookkeeping — under
+        # pipelining the phases overlap, so consecutive flush-to-flush
+        # deltas are the partition of total wall time), amortized over the
+        # flushed rounds
+        now = time.time()
+        wall, flush_mark = now - flush_mark, now
         for rec in records[-flushed:] if flushed else []:
             rec.wall_s = wall / flushed
-        if program.finalize is not None and flushed:
-            program.finalize(sc, t0 + flushed, bool(outs["exploited"][flushed - 1]))
-        t0 += flushed if stopped else r
+        if chunk_stopped:
+            stopped = True
+            # speculative chunks past the stop ran fully masked: their carry
+            # outputs are bitwise the stop round's state, their rounds all
+            # invalid — drop the outputs unread
+            stats["cancelled_chunks"] += len(pending)
+            pending.clear()
+        stats["chunks"] += 1
+        stats["host_flush_s"] += time.time() - f0
+        # the carry write-back waits until the carry is settled: with no
+        # chunk in flight, ``sc`` is exactly the flushed state (serial mode:
+        # every chunk; pipelined: the final chunk or the post-stop freeze)
+        if not pending and any_flushed and program.finalize is not None:
+            program.finalize(sc, t_final, last_exploit)
 
+    stats["total_s"] = time.time() - t_start
     return finalize_result(
         strategy=strategy,
         records=records,
         stopped=stopped,
         ledger=ledger,
         final_params=unflatten(w),
+        driver_stats=stats,
     )

@@ -44,9 +44,14 @@ class ScanProgram:
       precomputing in f64 keeps the Bernoulli flip bit-identical to the host
       reference).  Required iff ``select`` is given.
     * ``finalize(carry, t_next, last_exploit)`` — host write-back of the
-      chunk's final carry into the strategy's mutable state at each chunk
-      flush, so loop-driver consumers (``last_round_was_exploit``, server
-      state inspection) stay coherent.
+      final carry into the strategy's mutable state, so loop-driver
+      consumers (``last_round_was_exploit``, server state inspection) stay
+      coherent.  Called whenever the carry is settled (no chunk in flight):
+      the serial driver calls it at every chunk flush, the pipelined driver
+      (the default) only at the end of the run or after a stop drains the
+      in-flight chunk — it may block on carry device values, but it must be
+      a pure overwrite of the final state, never a per-chunk accumulator
+      (both call patterns must leave identical state).
     """
 
     carry: Any
