@@ -23,7 +23,11 @@ legs (the scan driver's two-deep chunk pipeline: next-chunk build + H2D +
 dispatch overlapped with the current chunk's execution) timed against the
 serial scan driver (`pipeline_speedup_vs_scan` /
 `sharded_pipeline_speedup_vs_sharded_scan`) with record equivalence
-asserted EXACTLY (same compiled program, only host scheduling differs).
+asserted EXACTLY (same compiled program, only host scheduling differs), and
+a `paged_fleet` leg (``client_store="paged"``: FedAvg at M=10⁴ vs M=10⁵
+clients, asserting peak live device bytes stay flat within 10% — the paged
+store's O(P_cand) device-memory contract — with the peaks and H2D page
+traffic recorded under `paged_fleet`).
 Every scan leg also reports its host/device time split from
 ``FLResult.driver_stats`` (`driver_stats` + `host_fraction` — the fraction
 of wall time the host spent building/flushing rather than the device
@@ -81,9 +85,30 @@ def _dataset(num_clients: int, samples_per_client: int):
     return ds
 
 
+def _fleet_dataset(m: int, n_per: int, feature_dim: int = 16, num_classes: int = 4):
+    """A fleet-scale dataset built DIRECTLY — the Dirichlet partitioner's
+    per-client Python work is O(M · classes), which at M=10⁵ would dominate
+    the benchmark.  m clients × n_per identical-size tiny shards: total
+    sample bytes scale with M, per-chunk cohort bytes do not."""
+    from repro.data.synthetic import FederatedDataset
+
+    rng = np.random.default_rng(7)
+    n = m * n_per
+    x = rng.standard_normal((n, feature_dim)).astype(np.float32)
+    y = (np.arange(n) % num_classes).astype(np.int32)
+    eval_x = rng.standard_normal((256, feature_dim)).astype(np.float32)
+    eval_y = (np.arange(256) % num_classes).astype(np.int32)
+    idx = np.arange(n, dtype=np.int64).reshape(m, n_per)
+    return FederatedDataset(
+        x=x, y=y, client_indices=[idx[k] for k in range(m)],
+        eval_x=eval_x, eval_y=eval_y, num_classes=num_classes,
+    )
+
+
 def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
         epochs: int = EPOCHS, driver: str = "loop", chunk: int = 8,
-        warmup: int = 1, strategy_fn=None, pipeline=None):
+        warmup: int = 1, strategy_fn=None, pipeline=None,
+        client_store: str = "resident"):
     try:
         from benchmarks.common import per_round_wall
     except ImportError:
@@ -103,7 +128,7 @@ def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
         model, ds, strategy_fn(),
         max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
         engine=engine, driver=driver, scan_chunk_rounds=chunk,
-        pipeline=pipeline,
+        pipeline=pipeline, client_store=client_store,
     )
     wall = time.time() - t0
     # exclude the compile-heavy warmup rounds (unless nothing would remain)
@@ -265,6 +290,48 @@ def main(argv=None) -> int:
             res_bat_c.ledger.total_bytes, res_scan_c.ledger.total_bytes)
         speedup_c = per_round["batched_fedcom"] / per_round["scan_fedcom"]
 
+        # fleet-scale paged store: client_store="paged" keeps the (M, N_max,
+        # …) universe HOST-side and pages only each chunk's candidate rows,
+        # so peak live device bytes must stay FLAT as the fleet grows 10x —
+        # M=10k vs M=100k within 10% (the acceptance bar; everything on the
+        # device is O(P_cand), never O(M))
+        import gc
+
+        from repro.fl.baselines import FedAvg
+
+        def fleet_leg(m_fleet: int):
+            gc.collect()
+            ds_f = _fleet_dataset(m_fleet, 4)
+            model_f = MLPClassifier(feature_dim=16, num_classes=4, hidden=(32,))
+            mk = lambda: FedAvg(m_fleet, 8, 1, seed=0)
+            res, _, spr = run(
+                "batched", ds_f, model_f, 8, clients=8, epochs=1,
+                driver="scan", chunk=4, warmup=4, strategy_fn=mk,
+                client_store="paged")
+            assert res.rounds_run == 8, res.rounds_run
+            assert np.isfinite(res.final_accuracy), res.final_accuracy
+            st = res.driver_stats
+            assert st["store"] == "paged" and st["peak_live_bytes"] > 0
+            assert st["page_bytes_h2d"] > 0
+            return spr, st
+
+        per_round["paged_fleet_10k"], st_10k = fleet_leg(10_000)
+        per_round["paged_fleet_100k"], st_100k = fleet_leg(100_000)
+        peak_10k = st_10k["peak_live_bytes"]
+        peak_100k = st_100k["peak_live_bytes"]
+        peak_ratio = peak_100k / max(peak_10k, 1)
+        assert abs(peak_ratio - 1.0) <= 0.10, (
+            f"paged store device memory not flat in M: peak {peak_10k} B at "
+            f"M=10k vs {peak_100k} B at M=100k ({peak_ratio:.3f}x)")
+        paged_fleet = {
+            "m_small": 10_000, "m_large": 100_000,
+            "peak_live_bytes_10k": peak_10k,
+            "peak_live_bytes_100k": peak_100k,
+            "peak_ratio_100k_vs_10k": peak_ratio,
+            "page_bytes_h2d_100k": st_100k["page_bytes_h2d"],
+            "schedule_bytes_host_100k": st_100k["schedule_bytes_host"],
+        }
+
         write_report(args.out, per_round,
                      {"mode": "smoke", "clients": 4, "steps": 4,
                       "scan_chunk_rounds": chunk,
@@ -274,6 +341,7 @@ def main(argv=None) -> int:
                       "sharded_scan_speedup_vs_sharded": speedup_sh,
                       "pipeline_speedup_vs_scan": speedup_pip,
                       "sharded_pipeline_speedup_vs_sharded_scan": speedup_shp,
+                      "paged_fleet": paged_fleet,
                       "host_split": host_split})
         print(f"engine-smoke OK: batched+sharded+scan+sharded_scan+pipelined, "
               f"acc={res_bat.final_accuracy:.3f}, scan {speedup:.2f}x batched, "
@@ -281,6 +349,7 @@ def main(argv=None) -> int:
               f"sharded_scan {speedup_sh:.2f}x sharded, "
               f"pipelined {speedup_pip:.2f}x scan, "
               f"sharded_pipelined {speedup_shp:.2f}x sharded_scan, "
+              f"paged_fleet peak 100k/10k {peak_ratio:.3f}x, "
               f"host_fraction(scan)="
               f"{host_split['scan'].get('host_fraction', 0):.2f}")
         # regression signal: the scan driver must never be SLOWER than the

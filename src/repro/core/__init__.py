@@ -21,6 +21,7 @@ from repro.core.selection import (
     explore_probability,
     select_clients,
     select_clients_device,
+    select_clients_device_candidates,
     top_p_by_heuristic,
 )
 from repro.core.server import FLrceServer, FLrceState, init_state
@@ -44,6 +45,7 @@ __all__ = [
     "explore_probability",
     "select_clients",
     "select_clients_device",
+    "select_clients_device_candidates",
     "top_p_by_heuristic",
     "FLrceServer",
     "FLrceState",

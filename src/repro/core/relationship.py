@@ -201,6 +201,64 @@ def sharded_relationship_block(
     return rows_from_relationship_dots(ids, dots, last_rounds, t, omega_rows)
 
 
+def sketched_relationship_block(
+    ids: jax.Array,           # (K,) fresh client ids (distinct)
+    u: jax.Array,             # (K, D) fresh updates
+    w_t: jax.Array,           # (D,) global model at round t
+    updates: jax.Array,       # (K_rows, D) SKETCHED update map V
+    anchors: jax.Array,       # (K_rows, D) sketched anchor map A
+    row_owner: jax.Array,     # (K_rows,) global client id owning each row; -1 empty
+    last_rounds_eff: jax.Array,  # (M,) EFFECTIVE time map: -1 for non-resident
+    t: int,
+    omega_rows: jax.Array,    # (K, M) previous Ω rows for ids
+) -> jax.Array:
+    """:func:`relationship_block` against top-K-row sketched V/A maps.
+
+    The maps hold only ``K_rows`` client rows (LRU-allocated by the server;
+    ``row_owner`` maps sketch row → global id).  The nine dot groups are
+    computed on the (K_rows, D) sketch — O(K·K_rows·D) instead of
+    O(K·M·D) — and scattered to M-width columns via ``row_owner`` before the
+    shared row assembly.  A client without a resident row contributes zero
+    dots AND ``last_rounds_eff = -1``, so :func:`rows_from_relationship_dots`
+    keeps its previous Ω entry exactly as if it were never seen: when no
+    eviction has occurred the result is identical to the exact block (each
+    retained (u_k, v_j) inner product is the same reduction over D).
+
+    The caller must have written the fresh updates/anchors into the ids'
+    own sketch rows first (Alg. 4 line 10 order), so the fresh self-dots
+    land in ``uv``'s owner-scattered columns at ``ids``.
+    """
+    u32 = u.astype(jnp.float32)
+    v32 = updates.astype(jnp.float32)
+    a32 = anchors.astype(jnp.float32)
+    w32 = w_t.astype(jnp.float32)
+    m = last_rounds_eff.shape[0]
+    # scatter target: empty rows (owner -1) drop out of the M-width expansion
+    # (an explicit out-of-range index — jnp negative indices wrap, so -1
+    # itself must never reach the scatter)
+    col = jnp.where(row_owner >= 0, row_owner, m)
+
+    def expand_cols(d_k):                               # (K, K_rows) → (K, M)
+        k = d_k.shape[0]
+        return jnp.zeros((k, m), d_k.dtype).at[:, col].set(d_k, mode="drop")
+
+    def expand_vec(d_k):                                # (K_rows,) → (M,)
+        return jnp.zeros((m,), d_k.dtype).at[col].set(d_k, mode="drop")
+
+    uv = expand_cols(kops.cross_gram(u32, v32))         # (K,M) ⟨u_k, v_j⟩
+    ua = expand_cols(kops.cross_gram(u32, a32))         # (K,M) ⟨u_k, a_j⟩
+    uw = u32 @ w32                                      # (K,)
+    vw = expand_vec(v32 @ w32)                          # (M,)
+    aw = expand_vec(a32 @ w32)                          # (M,)
+    vv = expand_vec(jnp.sum(v32 * v32, axis=1))         # (M,)
+    av = expand_vec(jnp.sum(a32 * v32, axis=1))         # (M,)
+    aa = expand_vec(jnp.sum(a32 * a32, axis=1))         # (M,)
+    ww = jnp.vdot(w32, w32)
+    return rows_from_relationship_dots(
+        ids, (uv, ua, uw, vw, aw, vv, av, aa, ww), last_rounds_eff, t, omega_rows
+    )
+
+
 def rows_from_relationship_dots(
     ids: jax.Array,
     dots,                     # (uv, ua, uw, vw, aw, vv, av, aa, ww)

@@ -80,6 +80,37 @@ def select_clients_device(
     return ids, jnp.logical_not(explore)
 
 
+def select_clients_device_candidates(
+    rng: jax.Array,
+    heuristic: jax.Array,     # (M,) full-universe heuristic H
+    cand: jax.Array,          # (P_cand,) sorted global candidate ids
+    phi: jax.Array,
+    p: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 2 restricted to a candidate set — the paged-store contract.
+
+    The host proposes a superset ``cand`` of P_cand ≥ P sorted global ids;
+    the device runs the explore flip / ``choice`` / ``top_k`` machinery of
+    :func:`select_clients_device` over the CANDIDATE-relative index space and
+    returns ``(slots (p,) int32 sorted, exploited bool)`` — slots, not ids:
+    the caller recovers global ids as ``cand[slots]`` (and pages/schedules
+    are slot-indexed, so slots are what the chunk program actually consumes).
+
+    Exact-equivalence mode: with ``cand = arange(M)`` the gathered heuristic
+    is the full H, ``choice(P_cand)`` consumes the key exactly like
+    ``choice(M)``, and ``top_k``'s lower-index-first tie-break orders slots
+    exactly like ids — so slots ≡ the ids :func:`select_clients_device`
+    returns, bitwise.  With P_cand < M the draw is an approximation: explore
+    samples uniformly from the candidates (not the universe) and exploit
+    picks the top-P within the proposal.
+    """
+    p_cand = cand.shape[0]
+    if p > p_cand:
+        raise ValueError(f"cannot select P={p} from P_cand={p_cand} candidates")
+    slots, exploited = select_clients_device(rng, heuristic[cand], phi, p)
+    return slots, exploited
+
+
 def top_p_by_heuristic(heuristic: jax.Array, p: int) -> jax.Array:
     """Pure exploit selection (used by tests and the ES analysis)."""
     m = heuristic.shape[0]

@@ -10,6 +10,15 @@ State carried across rounds (Table 1):
 * ``anchors`` (M, D) — global model at each client's last active round
   (needed to anchor the orthdist ray; see core.relationship)
 * ``last_round`` (M,) — R, each client's last active round (-1 = never)
+
+**Sketched V/A** (``va_rows=K < M``): at fleet scale the (M, D) maps are the
+dominant server allocation, yet only recently-active clients' rows are ever
+read fresh.  The sketch keeps K LRU-allocated rows (``va_owner`` maps sketch
+row → client, ``va_slot`` client → row, -1 = none); a client whose row was
+evicted is treated as never seen (its Ω entries freeze at their last value,
+exactly the exact path's unseen handling).  With ``va_rows=None`` or
+``va_rows >= M`` the maps are exact and every result is bitwise the
+unsketched server's — the equivalence switch the scan/paged drivers rely on.
 """
 from __future__ import annotations
 
@@ -28,24 +37,78 @@ class FLrceState:
     t: int
     omega: jax.Array        # (M, M)
     heuristic: jax.Array    # (M,)
-    updates: jax.Array      # (M, D)
-    anchors: jax.Array      # (M, D)
+    updates: jax.Array      # (M | K, D) — K sketch rows when va_rows is set
+    anchors: jax.Array      # (M | K, D)
     last_round: jax.Array   # (M,) int32
     stopped: bool = False
     stop_round: Optional[int] = None
     last_conflicts: float = 0.0
+    va_owner: Optional[jax.Array] = None   # (K,) sketch row → client id; -1 empty
+    va_slot: Optional[jax.Array] = None    # (M,) client id → sketch row; -1 none
 
 
-def init_state(num_clients: int, dim: int) -> FLrceState:
+def init_state(
+    num_clients: int, dim: int, va_rows: Optional[int] = None
+) -> FLrceState:
     m = num_clients
+    k = m if va_rows is None else min(int(va_rows), m)
+    sketched = k < m
     return FLrceState(
         t=0,
         omega=jnp.zeros((m, m), jnp.float32),
         heuristic=jnp.zeros((m,), jnp.float32),
-        updates=jnp.zeros((m, dim), jnp.float32),
-        anchors=jnp.zeros((m, dim), jnp.float32),
+        updates=jnp.zeros((k, dim), jnp.float32),
+        anchors=jnp.zeros((k, dim), jnp.float32),
         last_round=jnp.full((m,), -1, jnp.int32),
+        va_owner=jnp.full((k,), -1, jnp.int32) if sketched else None,
+        va_slot=jnp.full((m,), -1, jnp.int32) if sketched else None,
     )
+
+
+def sketch_assign_rows(
+    va_owner: jax.Array,      # (K,) sketch row → owning client id; -1 empty
+    va_slot: jax.Array,       # (M,) client id → sketch row; -1 none
+    last_round: jax.Array,    # (M,) int32 — LRU key (BEFORE this round's write)
+    ids: jax.Array,           # (P,) distinct selected client ids
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Assign a sketch row to every selected client — pure and traceable.
+
+    Clients that already own a row keep it; the rest take rows in eviction
+    order: empty rows first, then least-recently-active owners (stable, so
+    ties break by row index — deterministic across drivers).  Rows owned by
+    members of the current cohort are never evicted, which is always
+    satisfiable because K ≥ P is validated at server construction.  Returns
+    ``(va_owner', va_slot', slots)`` with ``slots[i]`` the row for ``ids[i]``.
+    """
+    k = va_owner.shape[0]
+    m = va_slot.shape[0]
+    ids = ids.astype(jnp.int32)
+    existing = va_slot[ids]                              # (P,) row or -1
+    has = existing >= 0
+    # rows owned by this cohort are pinned (scatter index k drops out; -1
+    # would WRAP under jnp indexing, hence the explicit out-of-range remap)
+    pinned = (
+        jnp.zeros((k,), bool)
+        .at[jnp.where(has, existing, k)]
+        .set(True, mode="drop")
+    )
+    owner_ok = va_owner >= 0
+    owner_last = jnp.where(owner_ok, last_round[jnp.maximum(va_owner, 0)], -2)
+    evict_key = jnp.where(pinned, jnp.iinfo(jnp.int32).max, owner_last)
+    order = jnp.argsort(evict_key, stable=True)          # empties, then LRU
+    need = jnp.logical_not(has)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1        # position among needy
+    fresh = order[jnp.maximum(rank, 0)]
+    slots = jnp.where(has, existing, fresh).astype(jnp.int32)
+    # clear the evicted owners' back-pointers before writing the new ones
+    old_owner = va_owner[slots]
+    stale = jnp.logical_and(need, old_owner >= 0)
+    va_slot = va_slot.at[jnp.where(stale, jnp.maximum(old_owner, 0), m)].set(
+        -1, mode="drop"
+    )
+    va_slot = va_slot.at[ids].set(slots)
+    va_owner = va_owner.at[slots].set(ids)
+    return va_owner, va_slot, slots
 
 
 class FLrceServer:
@@ -59,6 +122,7 @@ class FLrceServer:
         es_threshold: float,
         explore_decay: float = 0.98,
         seed: int = 0,
+        va_rows: Optional[int] = None,
     ):
         self.m = num_clients
         self.dim = dim
@@ -66,12 +130,24 @@ class FLrceServer:
         self.psi = es_threshold
         self.decay = explore_decay
         self._rng = jax.random.PRNGKey(seed)
-        self.state = init_state(num_clients, dim)
+        # va_rows=K < M sketches the (M, D) V/A maps down to K LRU rows;
+        # None (or K >= M) is the exact path — bitwise the historical server
+        self.va_rows = None if va_rows is None else int(va_rows)
+        if self.va_rows is not None and self.va_rows < clients_per_round:
+            raise ValueError(
+                f"va_rows={va_rows} must be >= clients_per_round="
+                f"{clients_per_round}: every selected client needs a sketch row"
+            )
+        self.state = init_state(num_clients, dim, va_rows=self.va_rows)
         self._last_exploit = False
         # mesh-sharded storage: set by bind_mesh (None ⇒ single-device maps)
         self.mesh = None
         self.mesh_axes: Tuple[str, ...] = ()
         self.dim_pad = dim
+
+    @property
+    def sketched(self) -> bool:
+        return self.state.va_owner is not None
 
     # -- optional mesh-sharded storage ---------------------------------------
     def bind_mesh(self, mesh, axes: Tuple[str, ...] = ("data", "model")) -> None:
@@ -86,6 +162,11 @@ class FLrceServer:
         from jax.sharding import NamedSharding, PartitionSpec
         from repro.core.distributed import mesh_axes_size, pad_dim
 
+        if self.sketched:
+            raise ValueError(
+                "sketched V/A maps (va_rows < M) are single-device for now; "
+                "run without a mesh or with va_rows=None"
+            )
         self.mesh = mesh
         self.mesh_axes = tuple(axes)
         self.dim_pad = pad_dim(self.dim, mesh_axes_size(mesh, self.mesh_axes))
@@ -139,25 +220,39 @@ class FLrceServer:
             u32 = self._shard_cols(u32)
         # Alg. 4 writes V/A/R first (line 10), then models relationships, so a
         # pair selected in the same round is compared synchronously.
-        updates = st.updates.at[ids].set(u32)
-        anchors = st.anchors.at[ids].set(w32[None, :])
-        last_round = st.last_round.at[ids].set(t)
-
-        # All P fresh Ω rows in one fused Gram-kernel pass (no per-client
-        # Python loop; each row only depends on its own previous row, so the
-        # block is exactly the stacked per-row recurrence).  Mesh-bound
-        # servers reduce the same inner products across the D-shards.
         ids_dev = jnp.asarray(ids)
-        if self.mesh is not None:
-            rows = relationship.sharded_relationship_block(
-                ids_dev, u32, w32, updates, anchors, last_round, t,
-                st.omega[ids_dev], mesh=self.mesh, axes=self.mesh_axes,
+        if self.sketched:
+            va_owner, va_slot, slots = sketch_assign_rows(
+                st.va_owner, st.va_slot, st.last_round, ids_dev
             )
-        else:
-            rows = relationship.relationship_block(
-                ids_dev, u32, w32, updates, anchors, last_round, t,
+            updates = st.updates.at[slots].set(u32)
+            anchors = st.anchors.at[slots].set(w32[None, :])
+            last_round = st.last_round.at[ids].set(t)
+            eff_last = jnp.where(va_slot >= 0, last_round, -1)
+            rows = relationship.sketched_relationship_block(
+                ids_dev, u32, w32, updates, anchors, va_owner, eff_last, t,
                 st.omega[ids_dev],
             )
+        else:
+            va_owner, va_slot = st.va_owner, st.va_slot
+            updates = st.updates.at[ids].set(u32)
+            anchors = st.anchors.at[ids].set(w32[None, :])
+            last_round = st.last_round.at[ids].set(t)
+
+            # All P fresh Ω rows in one fused Gram-kernel pass (no per-client
+            # Python loop; each row only depends on its own previous row, so
+            # the block is exactly the stacked per-row recurrence).  Mesh-
+            # bound servers reduce the same inner products across the D-shards.
+            if self.mesh is not None:
+                rows = relationship.sharded_relationship_block(
+                    ids_dev, u32, w32, updates, anchors, last_round, t,
+                    st.omega[ids_dev], mesh=self.mesh, axes=self.mesh_axes,
+                )
+            else:
+                rows = relationship.relationship_block(
+                    ids_dev, u32, w32, updates, anchors, last_round, t,
+                    st.omega[ids_dev],
+                )
         omega = st.omega.at[ids_dev].set(rows)
         heuristic = heuristics.update_heuristic_rows(st.heuristic, omega, ids_dev)
         self.state = dataclasses.replace(
@@ -167,6 +262,8 @@ class FLrceServer:
             updates=updates,
             anchors=anchors,
             last_round=last_round,
+            va_owner=va_owner,
+            va_slot=va_slot,
         )
 
     # -- Alg. 4 lines 20-23: early stopping ---------------------------------
@@ -219,7 +316,7 @@ class FLrceServer:
         without ever replicating the O(M·D) state.
         """
         st = self.state
-        return {
+        carry = {
             "rng": self._rng,
             "omega": st.omega,
             "heuristic": st.heuristic,
@@ -232,16 +329,25 @@ class FLrceServer:
             ),
             "conflicts": jnp.asarray(st.last_conflicts, jnp.float32),
         }
+        if self.sketched:
+            carry["va_owner"] = st.va_owner
+            carry["va_slot"] = st.va_slot
+        return carry
 
     def scan_select(
-        self, carry: Dict[str, jax.Array], phi: jax.Array
+        self, carry: Dict[str, jax.Array], phi: jax.Array, cand: jax.Array
     ) -> Tuple[Dict[str, jax.Array], jax.Array, jax.Array]:
-        """Alg. 2 on device: same key split sequence as :meth:`select`."""
+        """Alg. 2 on device under the candidate-set contract.
+
+        Same key split sequence as :meth:`select`; returns candidate-relative
+        ``slots`` (the scan driver recovers ids as ``cand[slots]``).  With
+        ``cand = arange(M)`` the draw is bitwise :meth:`select`'s.
+        """
         rng, sub = jax.random.split(carry["rng"])
-        ids, exploited = selection.select_clients_device(
-            sub, carry["heuristic"], phi, self.p
+        slots, exploited = selection.select_clients_device_candidates(
+            sub, carry["heuristic"], cand, phi, self.p
         )
-        return {**carry, "rng": rng}, ids, exploited
+        return {**carry, "rng": rng}, slots, exploited
 
     def scan_ingest(
         self,
@@ -260,23 +366,39 @@ class FLrceServer:
         """
         w32 = w_t.astype(jnp.float32)
         u32 = client_updates.astype(jnp.float32)
-        updates = carry["updates"].at[ids].set(u32)
-        anchors = carry["anchors"].at[ids].set(w32[None, :])
-        last_round = carry["last_round"].at[ids].set(t.astype(jnp.int32))
-        if self.mesh is not None:
-            rows = relationship.sharded_relationship_block(
-                ids, u32, w32, updates, anchors, last_round, t,
-                carry["omega"][ids], mesh=self.mesh, axes=self.mesh_axes,
+        out: Dict[str, jax.Array] = {}
+        if self.sketched:
+            va_owner, va_slot, slots = sketch_assign_rows(
+                carry["va_owner"], carry["va_slot"], carry["last_round"], ids
             )
-        else:
-            rows = relationship.relationship_block(
-                ids, u32, w32, updates, anchors, last_round, t,
+            updates = carry["updates"].at[slots].set(u32)
+            anchors = carry["anchors"].at[slots].set(w32[None, :])
+            last_round = carry["last_round"].at[ids].set(t.astype(jnp.int32))
+            eff_last = jnp.where(va_slot >= 0, last_round, -1)
+            rows = relationship.sketched_relationship_block(
+                ids, u32, w32, updates, anchors, va_owner, eff_last, t,
                 carry["omega"][ids],
             )
+            out["va_owner"], out["va_slot"] = va_owner, va_slot
+        else:
+            updates = carry["updates"].at[ids].set(u32)
+            anchors = carry["anchors"].at[ids].set(w32[None, :])
+            last_round = carry["last_round"].at[ids].set(t.astype(jnp.int32))
+            if self.mesh is not None:
+                rows = relationship.sharded_relationship_block(
+                    ids, u32, w32, updates, anchors, last_round, t,
+                    carry["omega"][ids], mesh=self.mesh, axes=self.mesh_axes,
+                )
+            else:
+                rows = relationship.relationship_block(
+                    ids, u32, w32, updates, anchors, last_round, t,
+                    carry["omega"][ids],
+                )
         omega = carry["omega"].at[ids].set(rows)
         heuristic = heuristics.update_heuristic_rows(carry["heuristic"], omega, ids)
         return {
             **carry,
+            **out,
             "omega": omega,
             "heuristic": heuristic,
             "updates": updates,
@@ -353,6 +475,8 @@ class FLrceServer:
             stopped=bool(carry["es_stopped"]),
             stop_round=None if stop_round < 0 else stop_round,
             last_conflicts=float(carry["conflicts"]),
+            va_owner=carry.get("va_owner"),
+            va_slot=carry.get("va_slot"),
         )
         self._rng = carry["rng"]
         self._last_exploit = bool(last_exploit)

@@ -2,10 +2,13 @@
 from repro.data.device import (
     ChunkSchedule,
     DeviceClientStore,
+    HostClientStore,
     build_chunk_schedule,
+    flat_row_index,
     clear_schedule_memo,
     place_schedule,
     shard_schedule,
+    validate_store_geometry,
 )
 from repro.data.loader import epoch_batches, num_batches
 from repro.data.partition import (
@@ -24,10 +27,13 @@ from repro.data.tokens import SiloTokenStream
 __all__ = [
     "ChunkSchedule",
     "DeviceClientStore",
+    "HostClientStore",
     "build_chunk_schedule",
+    "flat_row_index",
     "clear_schedule_memo",
     "place_schedule",
     "shard_schedule",
+    "validate_store_geometry",
     "epoch_batches",
     "num_batches",
     "dirichlet_label_partition",

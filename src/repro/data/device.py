@@ -1,4 +1,4 @@
-"""Device-resident client store for the compiled (scan) round driver.
+"""Client stores for the compiled (scan) round driver: device-resident + host-paged.
 
 The loop drivers rebuild and upload a fresh ``(P, S, B, *feat)`` cohort plan
 every round — O(cohort bytes) of host work and host→device traffic per round.
@@ -7,6 +7,20 @@ The scan driver instead uploads every client's shard ONCE as stacked
 schedules (int32, ~feature_dim× smaller).  Selection then happens inside the
 jitted chunk program and the round's ``(P, S, B, …)`` batches are gathered
 on device from the store.
+
+At fleet scale (M ≫ any round's cohort) the resident layout stops fitting:
+:class:`HostClientStore` keeps the (M, N_max, …) universe in host memory and
+:meth:`HostClientStore.page` uploads only a chunk's candidate rows — a
+``(P_cand, N_max, …)`` page the chunk program indexes by *slot* (position in
+the candidate set) instead of global client id.  Pages are fresh async
+``device_put`` buffers, so the pipelined driver double-buffers them exactly
+like :func:`place_schedule` buffers: chunk k+1's page transfers while chunk k
+computes, and device memory stays O(P_cand), flat in M.
+
+Host size accounting is int64 throughout: flattened (client, sample) row
+indices live in the ``M·N_max`` space, which exceeds int32 once the fleet
+passes ~2³¹ total padded samples (:func:`flat_row_index`,
+:func:`validate_store_geometry`).
 
 For the mesh-sharded chunks (``driver="scan", engine="sharded"``) the store
 is laid out sharded over the mesh ``data`` axis along the client dimension
@@ -33,6 +47,39 @@ import numpy as np
 from repro.data.loader import bucket_steps as _bucket_steps
 from repro.data.synthetic import FederatedDataset
 
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+def validate_store_geometry(m: int, n_max: int) -> None:
+    """Reject store shapes whose index math cannot be represented.
+
+    Per-row sample positions must fit int32 (batch schedules are int32), and
+    the flattened (client, sample) row-index space ``m * n_max`` must fit
+    int64 — the product routinely exceeds int32 at fleet scale, which is why
+    every host-side flat index goes through :func:`flat_row_index` (int64)
+    instead of multiplying int32 sizes.
+    """
+    if m < 0 or n_max < 0:
+        raise ValueError(f"store geometry must be non-negative, got M={m}, N_max={n_max}")
+    if n_max > _INT32_MAX:
+        raise ValueError(
+            f"N_max={n_max} exceeds int32; batch schedules index samples in int32"
+        )
+    if int(m) * int(n_max) > np.iinfo(np.int64).max:
+        raise ValueError(f"M·N_max={m}·{n_max} overflows int64 flat indexing")
+
+
+def flat_row_index(cids: np.ndarray, pos: np.ndarray, n_max: int) -> np.ndarray:
+    """Flattened (client, sample) → index into an ``(M * N_max, …)`` view.
+
+    Always int64: with M·N_max beyond 2³¹ the int32 product silently wraps
+    negative (the overflow this helper exists to prevent — see the boundary
+    test in ``tests/test_paged_store.py``).
+    """
+    cids = np.asarray(cids, np.int64)
+    pos = np.asarray(pos, np.int64)
+    return cids * np.int64(n_max) + pos
+
 
 @dataclasses.dataclass
 class DeviceClientStore:
@@ -41,7 +88,7 @@ class DeviceClientStore:
     x: jax.Array              # (M[_pad], N_max, *feat) float32
     y: jax.Array              # (M[_pad], N_max) int32
     sizes: jax.Array          # (M,) int32 — real samples per client
-    sizes_host: np.ndarray    # host copy for schedule building / the ledger
+    sizes_host: np.ndarray    # int64 host copy for schedule building / the ledger
 
     @property
     def num_clients(self) -> int:
@@ -59,25 +106,16 @@ class DeviceClientStore:
         data-axis-sharded layout — the host NumPy staging arrays are
         ``device_put`` exactly once, never uploaded replicated first.
         """
-        sizes = ds.client_sizes().astype(np.int32)
-        m = len(ds.client_indices)
-        n_max = max(1, int(sizes.max()) if m else 1)
-        feat = ds.x.shape[1:]
-        x = np.zeros((m, n_max, *feat), np.float32)
-        y = np.zeros((m, n_max), np.int32)
-        for k in range(m):
-            xk, yk = ds.client_data(k)
-            x[k, : len(xk)] = xk
-            y[k, : len(yk)] = yk
+        host = HostClientStore.from_dataset(ds)
         if mesh is None:
-            x_dev, y_dev = jnp.asarray(x), jnp.asarray(y)
+            x_dev, y_dev = jnp.asarray(host.x), jnp.asarray(host.y)
         else:
-            x_dev, y_dev = _place_client_sharded(x, y, mesh, data_axis)
+            x_dev, y_dev = _place_client_sharded(host.x, host.y, mesh, data_axis)
         return cls(
             x=x_dev,
             y=y_dev,
-            sizes=jnp.asarray(sizes),
-            sizes_host=sizes,
+            sizes=jnp.asarray(host.sizes_host.astype(np.int32)),
+            sizes_host=host.sizes_host,
         )
 
     def shard(self, mesh, data_axis: str = "data") -> "DeviceClientStore":
@@ -94,20 +132,29 @@ class DeviceClientStore:
 
     def gather_cohort(
         self,
-        ids: jax.Array,           # (P,) traced client ids
-        batch_idx: jax.Array,     # (M, S, B) int32 — this round's schedule
-        sample_w: jax.Array,      # (M, S, B) float32
-        step_valid: jax.Array,    # (M, S) float32
+        ids: jax.Array,           # (P,) traced schedule indices
+        batch_idx: jax.Array,     # (M | P_cand, S, B) int32 — this round's schedule
+        sample_w: jax.Array,      # (M | P_cand, S, B) float32
+        step_valid: jax.Array,    # (M | P_cand, S) float32
+        *,
+        rows: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
         """Materialize the selected cohort's padded batches on device.
 
         Traceable (runs inside the scan body, after on-device selection).
-        Returns ``(x (P,S,B,*feat), y (P,S,B), sample_w (P,S,B),
-        step_valid (P,S))`` — exactly a :class:`CohortPlan`'s arrays.
+        ``ids`` index the schedule tensors' leading axis; ``rows`` (default
+        ``ids``) index the store's client axis.  They coincide for a
+        full-universe store with full-universe schedules; with per-candidate
+        schedules a resident store passes global client ids as ``rows`` and
+        candidate-relative slots as ``ids`` (a paged store's rows ARE slots,
+        so the default applies again).  Returns ``(x (P,S,B,*feat),
+        y (P,S,B), sample_w (P,S,B), step_valid (P,S))`` — exactly a
+        :class:`CohortPlan`'s arrays.
         """
+        r = ids if rows is None else rows
         bi = batch_idx[ids]                              # (P, S, B)
-        rows = ids[:, None, None]
-        return self.x[rows, bi], self.y[rows, bi], sample_w[ids], step_valid[ids]
+        r = r[:, None, None]
+        return self.x[r, bi], self.y[r, bi], sample_w[ids], step_valid[ids]
 
 
 def _place_client_sharded(
@@ -133,18 +180,104 @@ def _place_client_sharded(
 
 
 @dataclasses.dataclass
+class HostClientStore:
+    """The (M, N_max, …) client universe in HOST memory, paged on demand.
+
+    The scan driver's fleet-scale layout (``client_store="paged"``): the
+    stacked sample tensors never reach the device whole.  Per chunk the
+    driver computes a candidate set (the union of the chunk's cohorts, or a
+    device-selection candidate superset), calls :meth:`page`, and the chunk
+    program sees only that ``(P_cand, N_max, …)`` slice — slot-indexed, with
+    ``ids = cand[slots]`` recovering global client ids inside the trace.
+    Device memory is therefore O(P_cand) regardless of M; at pipeline depth
+    2 at most two pages are live at once.
+    """
+
+    x: np.ndarray             # (M, N_max, *feat) float32
+    y: np.ndarray             # (M, N_max) int32
+    sizes_host: np.ndarray    # (M,) int64 — real samples per client
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.sizes_host)
+
+    @property
+    def nbytes(self) -> int:
+        return self.x.nbytes + self.y.nbytes
+
+    @classmethod
+    def from_dataset(cls, ds: FederatedDataset) -> "HostClientStore":
+        """Stack every client shard into padded host tensors.
+
+        One vectorized scatter instead of a per-client Python loop: all
+        sample rows land via a single int64 flat-index assignment
+        (:func:`flat_row_index`), so construction is O(total samples) NumPy
+        work even at M ≥ 10⁵ clients.
+        """
+        sizes = ds.client_sizes().astype(np.int64)
+        m = len(ds.client_indices)
+        n_max = max(1, int(sizes.max()) if m else 1)
+        validate_store_geometry(m, n_max)
+        feat = ds.x.shape[1:]
+        x = np.zeros((m, n_max, *feat), np.float32)
+        y = np.zeros((m, n_max), np.int32)
+        if m and sizes.sum():
+            cat = np.concatenate(
+                [np.asarray(ix, np.int64) for ix in ds.client_indices]
+            )
+            rows = np.repeat(np.arange(m, dtype=np.int64), sizes)
+            starts = np.cumsum(sizes) - sizes
+            pos = np.arange(int(sizes.sum()), dtype=np.int64) - np.repeat(starts, sizes)
+            flat = flat_row_index(rows, pos, n_max)
+            x.reshape(m * n_max, *feat)[flat] = ds.x[cat]
+            y.reshape(m * n_max)[flat] = ds.y[cat]
+        return cls(x=x, y=y, sizes_host=sizes)
+
+    def page(
+        self, cand: np.ndarray, mesh=None, data_axis: str = "data"
+    ) -> DeviceClientStore:
+        """Upload the candidate rows as a fresh slot-indexed device page.
+
+        ``cand`` is the chunk's (P_cand,) global-client-id candidate array
+        (host); row j of the page is client ``cand[j]``, so the chunk program
+        gathers by slot.  Every call allocates FRESH async ``device_put``
+        buffers — the same double-buffering discipline as
+        :func:`place_schedule`: chunk k+1's page transfers over while chunk k
+        executes and is freed when its plan is dropped.  With ``mesh`` the
+        page rows are placed data-axis-sharded like a resident store.
+        """
+        cand = np.asarray(cand, np.int64)
+        px, py = self.x[cand], self.y[cand]
+        sizes = self.sizes_host[cand]
+        if mesh is None:
+            x_dev, y_dev = jax.device_put(px), jax.device_put(py)
+        else:
+            x_dev, y_dev = _place_client_sharded(px, py, mesh, data_axis)
+        return DeviceClientStore(
+            x=x_dev,
+            y=y_dev,
+            sizes=jnp.asarray(sizes.astype(np.int32)),
+            sizes_host=sizes,
+        )
+
+
+@dataclasses.dataclass
 class ChunkSchedule:
     """Host-built batch schedules for a chunk of rounds [t0, t0 + R).
 
-    Index tensors only — the samples themselves never leave the device store.
-    Built for ALL M clients because selection is decided on device inside the
-    chunk program; a round's slice is gathered by the selected ids.
+    Index tensors only — the samples themselves never leave the client store.
+    The client axis is the chunk's CANDIDATE axis: column j schedules the
+    chunk's j-th candidate client (``client_ids[j]`` of
+    :func:`build_chunk_schedule`; the full universe when ``client_ids`` is
+    None).  Host bytes per chunk are therefore O(R · P_cand · S · B), not
+    O(R · M · S · B) — a round's slice is gathered by candidate-relative
+    slot inside the chunk program.
     """
 
     t0: int
-    batch_idx: np.ndarray     # (R, M, S, B) int32 — indices into a store row
-    sample_w: np.ndarray      # (R, M, S, B) float32: 1 = real sample, 0 = pad
-    step_valid: np.ndarray    # (R, M, S) float32: 1 = real step, 0 = pad
+    batch_idx: np.ndarray     # (R, P_cand, S, B) int32 — indices into a store row
+    sample_w: np.ndarray      # (R, P_cand, S, B) float32: 1 = real sample, 0 = pad
+    step_valid: np.ndarray    # (R, P_cand, S) float32: 1 = real step, 0 = pad
 
     @property
     def num_rounds(self) -> int:
@@ -153,6 +286,12 @@ class ChunkSchedule:
     @property
     def num_steps(self) -> int:
         return self.batch_idx.shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes this chunk's schedules occupy (regression-tested to be
+        O(P_cand), not O(M))."""
+        return self.batch_idx.nbytes + self.sample_w.nbytes + self.step_valid.nbytes
 
 
 def shard_schedule(
@@ -260,16 +399,17 @@ def _client_schedule(
 
 
 def build_chunk_schedule(
-    sizes: np.ndarray,                       # (M,) samples per client
-    epochs: np.ndarray,                      # (R, M) local epochs per (round, client)
+    sizes: np.ndarray,                       # (P_cand,) samples per candidate
+    epochs: np.ndarray,                      # (R, P_cand) local epochs per (round, candidate)
     batch_size: int,
     t0: int,
     rng_for: Callable[[int, int], np.random.Generator],
     *,
     bucket_steps: bool = True,
     cache_key: Optional[int] = None,
+    client_ids: Optional[np.ndarray] = None,
 ) -> ChunkSchedule:
-    """Draw every (round, client) batch schedule for a chunk of rounds.
+    """Draw every (round, candidate) batch schedule for a chunk of rounds.
 
     ``rng_for(t, cid)`` must return the same independent stream the loop
     engines use (``client_batch_rng``); each stream is consumed exactly like
@@ -279,24 +419,37 @@ def build_chunk_schedule(
     bucketed to a power of two so the jitted chunk program retraces per size
     bucket, not per chunk.
 
+    ``client_ids`` maps schedule column → GLOBAL client id (default: column
+    j is client j, the full-universe layout).  Passing the chunk's candidate
+    set builds per-cohort ``(R, P_cand, S, B)`` schedules whose columns draw
+    from the candidates' own fold-in streams — O(P_cand) host bytes and
+    draws per chunk instead of O(M), bitwise-identical per client to the
+    dense build (the stream is keyed by the global id, not the column).
+
     ``cache_key`` (the job's batch seed) enables the permutation memo: when
     set, each ``(cache_key, t, cid, n, e, batch_size)`` draw is computed once
     per process and reused — ``rng_for`` is not even invoked on a hit, which
     is exact because the stream is a pure function of ``(seed, t, cid)``.
+    Memo keys use the global id, so dense and per-cohort builds share hits.
     """
     sizes = np.asarray(sizes)
     epochs = np.asarray(epochs)
     r_rounds, m = epochs.shape
     if len(sizes) != m:
         raise ValueError(f"sizes has {len(sizes)} clients, epochs has {m}")
+    if client_ids is not None and len(client_ids) != m:
+        raise ValueError(
+            f"client_ids has {len(client_ids)} entries, epochs has {m} columns"
+        )
     per_round = []
     s_max = 1
     for r in range(r_rounds):
         t = t0 + r
         per_client = []
-        for cid in range(m):
-            n = int(sizes[cid])
-            e = max(1, int(epochs[r, cid]))
+        for col in range(m):
+            cid = int(client_ids[col]) if client_ids is not None else col
+            n = int(sizes[col])
+            e = max(1, int(epochs[r, col]))
             memo_key = (cache_key, t, cid, n, e, batch_size)
             if cache_key is not None and memo_key in _SCHEDULE_MEMO:
                 idx, w = _SCHEDULE_MEMO[memo_key]

@@ -34,6 +34,8 @@ class FLrce(Strategy):
         explore_decay: float = 0.98,
         use_early_stopping: bool = True,
         seed: int = 0,
+        va_rows: int | None = None,
+        candidates_per_chunk: int | None = None,
     ):
         super().__init__(num_clients, clients_per_round, local_epochs, seed)
         self.server = FLrceServer(
@@ -43,13 +45,64 @@ class FLrce(Strategy):
             es_threshold=es_threshold,
             explore_decay=explore_decay,
             seed=seed,
+            # va_rows=K < M sketches the server's (M, D) V/A maps to K
+            # LRU-owned rows; None keeps the exact maps (bitwise-equivalent
+            # switch — see core.server)
+            va_rows=va_rows,
         )
         self.use_es = use_early_stopping
+        # candidates_per_chunk=P_cand < M narrows device selection to a
+        # host-proposed candidate superset per chunk (approximate Alg. 2:
+        # the draw happens WITHIN the proposal).  None ⇒ full universe,
+        # the exact-equivalence mode.
+        if candidates_per_chunk is not None:
+            if candidates_per_chunk < clients_per_round:
+                raise ValueError(
+                    f"candidates_per_chunk={candidates_per_chunk} must be >= "
+                    f"clients_per_round={clients_per_round}"
+                )
+            candidates_per_chunk = min(int(candidates_per_chunk), num_clients)
+        self.candidates_per_chunk = candidates_per_chunk
         if not use_early_stopping:
             self.name = "flrce_no_es"
 
     def select(self, t: int) -> np.ndarray:
         return self.server.select()
+
+    def propose_candidates(self, ts) -> np.ndarray | None:
+        """Candidate superset for a chunk's device-side Alg. 2 (paged mode).
+
+        None (default) ⇒ exact: the driver candidates the full universe.
+        With ``candidates_per_chunk=P_cand``: the top P_cand/2 clients by the
+        HOST heuristic (stale under pipelining — the carry is only written
+        back at finalize; that staleness is the approximation) plus a
+        deterministic seeded random fill, unique-sorted.  Exploit rounds
+        then top-k within the proposal; explore rounds sample uniformly from
+        it — a proposal-restricted draw, not the universe draw.
+        """
+        p_cand = self.candidates_per_chunk
+        if p_cand is None or p_cand >= self.m:
+            return None
+        try:
+            # the scan carry is DONATED into the chunk program; once a chunk
+            # is in flight the server's state arrays are deleted buffers.
+            # Snapshot the heuristic whenever it is readable (job start, and
+            # after every finalize write-back) and reuse the last snapshot
+            # otherwise — exactly the staleness the contract above documents.
+            heur = np.asarray(self.server.state.heuristic)
+            self._heur_snapshot = heur
+        except RuntimeError:
+            heur = getattr(self, "_heur_snapshot", None)
+            if heur is None:
+                heur = np.zeros(self.m, np.float32)
+        n_top = p_cand // 2
+        top = np.lexsort((np.arange(self.m), -heur))[:n_top]
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, 0x5EED, int(ts[0])])
+        )
+        rest = np.setdiff1d(np.arange(self.m), top, assume_unique=False)
+        fill = rng.choice(rest, size=p_cand - len(top), replace=False)
+        return np.sort(np.concatenate([top, fill])).astype(np.int64)
 
     def bind_mesh(self, mesh, axes) -> None:
         # the V/A maps are the strategy's only O(D) state; sharding them makes
@@ -80,8 +133,10 @@ class FLrce(Strategy):
         server = self.server
         use_es = bool(self.use_es)
 
-        def select(carry, t, phi):
-            return server.scan_select(carry, phi)
+        def select(carry, t, phi, cand):
+            # candidate-set contract: returns candidate-relative slots; with
+            # the full-universe cand the draw is bitwise the host reference
+            return server.scan_select(carry, phi, cand)
 
         def post_round(carry, t, w_before, ids, update_matrix, exploited):
             u32 = update_matrix.astype(jnp.float32)

@@ -44,6 +44,14 @@ executes:
   results) — and, for the sharded chunks, ``supports_sharded_scan``
   (FLrce, FedAvg, Fedprox); see docs/support-matrix.md.
 
+``client_store`` picks where the scan driver keeps the client universe:
+``"resident"`` (default) uploads the stacked (M, N_max, …) store to the
+device once; ``"paged"`` keeps it in host memory and pages only each chunk's
+candidate rows — device memory O(P_cand) flat in M, bitwise-identical
+results with full-universe candidates (``repro.data.HostClientStore``).
+Scan-only: the loop drivers reject it rather than silently ignoring the
+memory contract.
+
 Update post-processing (Fedcom top-k, QuantizedFL int8) is a device-resident
 ``Strategy.update_transform`` applied to the round's flat (P, D) update
 matrix by every engine — per-client updates never bounce through host NumPy.
@@ -230,6 +238,7 @@ def run_federated(
     driver: str = "loop",
     scan_chunk_rounds: int = 8,
     pipeline: Optional[bool] = None,
+    client_store: str = "resident",
 ) -> FLResult:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
@@ -241,6 +250,15 @@ def run_federated(
         raise ValueError(
             "pipeline= selects the scan driver's chunk pipelining; it has no "
             f"meaning for driver={driver!r} (pass driver='scan')"
+        )
+    if client_store not in ("resident", "paged"):
+        raise ValueError(
+            f"client_store must be 'resident' or 'paged', got {client_store!r}"
+        )
+    if client_store == "paged" and driver != "scan":
+        raise ValueError(
+            "client_store='paged' is the scan driver's host-paged store; it "
+            f"has no meaning for driver={driver!r} (pass driver='scan')"
         )
     if driver == "scan":
         if engine == "sequential":
@@ -269,6 +287,16 @@ def run_federated(
                 # pipelining is ON by default: overlap the next chunk's
                 # build/H2D/dispatch with the current chunk's execution
                 pipeline=True if pipeline is None else pipeline,
+                paged=client_store == "paged",
+            )
+        if client_store == "paged":
+            # the loop drivers rebuild per-round cohort plans and never touch
+            # a client store at all — a silent fallback would quietly ignore
+            # the memory contract the caller asked for
+            raise ValueError(
+                f"client_store='paged' requires the compiled scan path, but "
+                f"{strategy.name} falls back to the {engine} loop driver "
+                "(supports_scan/supports_sharded_scan)"
             )
         # host-coupled per-round logic (PyramidFL's loss-driven selection) or
         # a strategy without the mesh-chunk contract (masks/freeze flags,
@@ -326,7 +354,8 @@ def run_federated(
     last_eval_acc = 0.0
 
     for t in range(max_rounds):
-        t0 = time.time()
+        # monotonic clock: wall_s must never go negative under NTP slew
+        t0 = time.perf_counter()
         ids = strategy.select(t)
         # The round's flat buffer: w_before is flattened ONCE and shared by
         # aggregation, relationship modeling, and early stopping.
@@ -405,7 +434,7 @@ def run_federated(
             selected=[int(c) for c in ids],
             exploited=strategy.last_round_was_exploit,
             stopped=bool(stop),
-            wall_s=time.time() - t0,
+            wall_s=time.perf_counter() - t0,
             evaluated=evaluated,
         )
         records.append(rec)

@@ -80,7 +80,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
-from repro.data.device import DeviceClientStore, build_chunk_schedule, place_schedule
+from repro.data.device import (
+    ChunkSchedule,
+    DeviceClientStore,
+    HostClientStore,
+    build_chunk_schedule,
+    place_schedule,
+)
 from repro.data.synthetic import FederatedDataset
 from repro.fl.client import (
     BatchedCohortTrainer,
@@ -103,6 +109,34 @@ def _tree_where(pred, on_true, on_false):
     )
 
 
+def _bucket_candidates(n: int, cap: int) -> int:
+    """Round a chunk's candidate count up to a power of two (capped at M).
+
+    The union of a chunk's cohorts varies chunk to chunk; bucketing the
+    candidate axis keeps the jitted chunk program's shapes stable per bucket
+    (same discipline as the schedule step axis) instead of retracing every
+    chunk.  Pad slots are unreachable — host slots only point at real
+    candidates — so padding with a duplicated id is exact.
+    """
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
+
+
+def _live_device_bytes() -> int:
+    """Total bytes of live device arrays (the driver's memory probe).
+
+    Coarse by design: counts every live buffer in the process, which is
+    exactly what the flat-in-M acceptance check needs — if the paged path
+    leaked O(M) device state, it would show here.
+    """
+    try:
+        return sum(int(getattr(a, "nbytes", 0)) for a in jax.live_arrays())
+    except Exception:
+        return 0
+
+
 class _ChunkRunner:
     """Builds and caches the jitted chunk program for one FL job.
 
@@ -113,12 +147,16 @@ class _ChunkRunner:
     updates in place chunk over chunk.
     """
 
-    def __init__(self, model, store: DeviceClientStore, unflatten, program,
-                 transform, *, learning_rate: float, batch_size: int,
+    def __init__(self, model, store: Optional[DeviceClientStore], unflatten,
+                 program, transform, *, learning_rate: float, batch_size: int,
                  clients_per_round: int, eval_every: int, max_rounds: int,
-                 eval_x, eval_y, mesh=None):
+                 eval_x, eval_y, mesh=None, paged: bool = False):
         self.model = model
+        # resident mode closes the chunk over the full device store; paged
+        # mode (store=None) receives each chunk's (P_cand, N_max, …) page as
+        # ordinary program inputs instead
         self.store = store
+        self.paged = paged
         self.unflatten = unflatten
         self.program = program
         self.transform = transform
@@ -141,9 +179,10 @@ class _ChunkRunner:
     def _build(self, use_prox: bool, has_mask: bool, carry_shardings=None):
         store, program, unflatten = self.store, self.program, self.unflatten
         p, transform, mesh = self.p, self.transform, self.mesh
+        paged = self.paged
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
-        sizes_f = store.sizes.astype(jnp.float32)
+        sizes_f = None if paged else store.sizes.astype(jnp.float32)
         if mesh is None:
             train = self._train_raw
         else:
@@ -154,112 +193,148 @@ class _ChunkRunner:
             axes, p_pad = self.axes, self.p_pad
             rep_sharding = NamedSharding(mesh, P())
 
-        def body(carry, x_t):
-            w, sc, stopped, last_acc = carry
-            t, phi, host_ids, bi_t, sw_t, sv_t, prox_t, mask_t, freeze_t = x_t
-            params_t = unflatten(w)
+        def body_with(cand, page_x, page_y, page_sizes):
+            """The scan body, closed over this chunk's candidate remap.
 
-            # --- Alg. 2 selection (device) or host-precomputed ids ----------
-            if program.select is not None:
-                sc_new, ids, exploited = program.select(sc, t, phi)
-            else:
-                sc_new, ids, exploited = sc, host_ids, jnp.asarray(False)
-            sel_sizes = sizes_f[ids]
+            ``cand`` is the chunk's (P_cand,) sorted global candidate ids;
+            every per-round index in ``xs`` is a candidate-relative SLOT
+            (schedules and pages are slot-indexed), and ``ids = cand[slots]``
+            recovers global ids for sizes, the update transform and the
+            strategy carry.  Paged mode gathers samples from the page by
+            slot; resident mode gathers from the full store by global id.
+            """
 
-            # --- gather the cohort's padded batches from the store ----------
-            if mesh is None:
-                x, y, sw, sv = store.gather_cohort(ids, bi_t, sw_t, sv_t)
-                mu = prox_t[ids]
-                _, flat, losses = train(
-                    params_t, x, y, sw, sv, mask_t, freeze_t, mu,
-                    use_prox=use_prox, has_mask=has_mask,
-                )
-            else:
-                # pad the cohort to the data axis with exact no-op clients
-                # (zero step validity ⇒ identically-zero update rows), train
-                # shard_mapped over it, then do the ONE pad-then-all-to-all
-                # reshard to the (P, D_pad) D-sharded round-buffer layout
-                # the O(P) index vector MUST stay replicated: letting the
-                # partitioner row-shard it over ``data`` miscompiles the
-                # downstream store/schedule gathers (wrong rows, observed on
-                # 2x4 CPU meshes) — a with_sharding_constraint pins it
-                if p_pad > p:
-                    ids_pad = jnp.concatenate(
-                        [ids, jnp.zeros((p_pad - p,), jnp.int32)]
+            def body(carry, x_t):
+                w, sc, stopped, last_acc = carry
+                t, phi, host_slots, bi_t, sw_t, sv_t, prox_t, mask_t, freeze_t = x_t
+                params_t = unflatten(w)
+
+                # --- Alg. 2 selection (device, candidate-relative slots) ----
+                # or host-precomputed slots --------------------------------
+                if program.select is not None:
+                    sc_new, slots, exploited = program.select(sc, t, phi, cand)
+                else:
+                    sc_new, slots, exploited = sc, host_slots, jnp.asarray(False)
+                slots = slots.astype(jnp.int32)
+                ids = cand[slots]
+                sel_sizes = (page_sizes if paged else sizes_f)[
+                    slots if paged else ids
+                ]
+
+                # --- gather the cohort's padded batches ---------------------
+                if mesh is None:
+                    bi = bi_t[slots]
+                    if paged:
+                        rows = slots[:, None, None]
+                        x, y = page_x[rows, bi], page_y[rows, bi]
+                    else:
+                        rows = ids[:, None, None]
+                        x, y = store.x[rows, bi], store.y[rows, bi]
+                    sw, sv = sw_t[slots], sv_t[slots]
+                    mu = prox_t[slots]
+                    _, flat, losses = train(
+                        params_t, x, y, sw, sv, mask_t, freeze_t, mu,
+                        use_prox=use_prox, has_mask=has_mask,
                     )
                 else:
-                    ids_pad = ids
-                ids_pad = jax.lax.with_sharding_constraint(ids_pad, rep_sharding)
-                x, y, sw, sv = store.gather_cohort(ids_pad, bi_t, sw_t, sv_t)
-                if p_pad > p:
-                    valid_row = (jnp.arange(p_pad) < p).astype(sv.dtype)
-                    sv = sv * valid_row[:, None]
-                mu = prox_t[ids_pad]
-                _, flat, losses = train_sharded(
-                    params_t, x, y, sw, sv, mask_t, freeze_t, mu
+                    # pad the cohort to the data axis with exact no-op clients
+                    # (zero step validity ⇒ identically-zero update rows), train
+                    # shard_mapped over it, then do the ONE pad-then-all-to-all
+                    # reshard to the (P, D_pad) D-sharded round-buffer layout
+                    # the O(P) index vectors MUST stay replicated: letting the
+                    # partitioner row-shard them over ``data`` miscompiles the
+                    # downstream store/schedule gathers (wrong rows, observed on
+                    # 2x4 CPU meshes) — a with_sharding_constraint pins them
+                    if p_pad > p:
+                        slots_pad = jnp.concatenate(
+                            [slots, jnp.zeros((p_pad - p,), jnp.int32)]
+                        )
+                    else:
+                        slots_pad = slots
+                    slots_pad = jax.lax.with_sharding_constraint(
+                        slots_pad, rep_sharding
+                    )
+                    bi = bi_t[slots_pad]
+                    if paged:
+                        rows = slots_pad[:, None, None]
+                        x, y = page_x[rows, bi], page_y[rows, bi]
+                    else:
+                        rows_ids = jax.lax.with_sharding_constraint(
+                            cand[slots_pad], rep_sharding
+                        )
+                        rows = rows_ids[:, None, None]
+                        x, y = store.x[rows, bi], store.y[rows, bi]
+                    sw, sv = sw_t[slots_pad], sv_t[slots_pad]
+                    if p_pad > p:
+                        valid_row = (jnp.arange(p_pad) < p).astype(sv.dtype)
+                        sv = sv * valid_row[:, None]
+                    mu = prox_t[slots_pad]
+                    _, flat, losses = train_sharded(
+                        params_t, x, y, sw, sv, mask_t, freeze_t, mu
+                    )
+                    flat = trainer.reshard_rows_traced(flat, p)
+                    losses, sv = losses[:p], sv[:p]
+
+                # --- device-resident update transform (compression) -------------
+                if transform is not None:
+                    flat = transform(t, ids, flat)
+
+                # --- Eq. 4 aggregation from the flat buffer ---------------------
+                total = jnp.sum(sel_sizes)
+                weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
+                if mesh is None:
+                    w_new = w + weights @ flat
+                else:
+                    w_new = sharded_aggregate(w, flat, weights, mesh, axes)
+
+                # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -----------
+                if program.post_round is not None:
+                    sc_new, stop = program.post_round(sc_new, t, w, ids, flat, exploited)
+                else:
+                    stop = jnp.asarray(False)
+
+                # --- per-round stats (device nanmean over clients) --------------
+                cnt = jnp.sum(sv, axis=1)
+                has = cnt > 0.0
+                mean_k = jnp.where(has, jnp.sum(losses * sv, axis=1) / jnp.maximum(cnt, 1.0), 0.0)
+                n_has = jnp.sum(has.astype(jnp.float32))
+                mean_loss = jnp.where(
+                    n_has > 0.0, jnp.sum(mean_k) / jnp.maximum(n_has, 1.0), jnp.nan
                 )
-                flat = trainer.reshard_rows_traced(flat, p)
-                losses, sv = losses[:p], sv[:p]
 
-            # --- device-resident update transform (compression) -------------
-            if transform is not None:
-                flat = transform(t, ids, flat)
+                # --- evaluation (only when the loop driver would) ---------------
+                evaluated = jnp.logical_or(
+                    jnp.logical_or(t % eval_every == 0, stop), t == max_rounds - 1
+                )
+                acc = jax.lax.cond(
+                    evaluated,
+                    lambda wv: model.accuracy(unflatten(wv), eval_x, eval_y).astype(jnp.float32),
+                    lambda wv: last_acc,
+                    w_new,
+                )
 
-            # --- Eq. 4 aggregation from the flat buffer ---------------------
-            total = jnp.sum(sel_sizes)
-            weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
-            if mesh is None:
-                w_new = w + weights @ flat
-            else:
-                w_new = sharded_aggregate(w, flat, weights, mesh, axes)
+                # rounds after a stop still execute (scan has no early exit) but
+                # never touch the carry: the final state is the stop round's.
+                # ``stopped`` enters the carry at the CHUNK boundary too, so a
+                # speculative chunk dispatched after a stop runs fully masked —
+                # its carry out is bitwise its carry in.
+                new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc)
+                carry_out = _tree_where(stopped, carry, new_carry)
+                out = {
+                    "ids": ids,
+                    "exploited": exploited,
+                    "stop": stop,
+                    "acc": acc,
+                    "evaluated": evaluated,
+                    "mean_loss": mean_loss,
+                    "valid": jnp.logical_not(stopped),
+                }
+                return carry_out, out
 
-            # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -----------
-            if program.post_round is not None:
-                sc_new, stop = program.post_round(sc_new, t, w, ids, flat, exploited)
-            else:
-                stop = jnp.asarray(False)
+            return body
 
-            # --- per-round stats (device nanmean over clients) --------------
-            cnt = jnp.sum(sv, axis=1)
-            has = cnt > 0.0
-            mean_k = jnp.where(has, jnp.sum(losses * sv, axis=1) / jnp.maximum(cnt, 1.0), 0.0)
-            n_has = jnp.sum(has.astype(jnp.float32))
-            mean_loss = jnp.where(
-                n_has > 0.0, jnp.sum(mean_k) / jnp.maximum(n_has, 1.0), jnp.nan
-            )
-
-            # --- evaluation (only when the loop driver would) ---------------
-            evaluated = jnp.logical_or(
-                jnp.logical_or(t % eval_every == 0, stop), t == max_rounds - 1
-            )
-            acc = jax.lax.cond(
-                evaluated,
-                lambda wv: model.accuracy(unflatten(wv), eval_x, eval_y).astype(jnp.float32),
-                lambda wv: last_acc,
-                w_new,
-            )
-
-            # rounds after a stop still execute (scan has no early exit) but
-            # never touch the carry: the final state is the stop round's.
-            # ``stopped`` enters the carry at the CHUNK boundary too, so a
-            # speculative chunk dispatched after a stop runs fully masked —
-            # its carry out is bitwise its carry in.
-            new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc)
-            carry_out = _tree_where(stopped, carry, new_carry)
-            out = {
-                "ids": ids,
-                "exploited": exploited,
-                "stop": stop,
-                "acc": acc,
-                "evaluated": evaluated,
-                "mean_loss": mean_loss,
-                "valid": jnp.logical_not(stopped),
-            }
-            return carry_out, out
-
-        def chunk(w, sc, stopped, last_acc, xs):
-            carry0 = (w, sc, stopped, last_acc)
-            (w, sc, stopped, last_acc), outs = jax.lax.scan(body, carry0, xs)
+        def finish(carry, outs):
+            w, sc, stopped, last_acc = carry
             if carry_shardings is not None:
                 # pin the output carry to the INPUT carry's layouts: without
                 # this GSPMD is free to emit e.g. FLrce's (M,) round map
@@ -272,13 +347,28 @@ class _ChunkRunner:
                 )
             return w, sc, stopped, last_acc, outs
 
+        if paged:
+            def chunk(w, sc, stopped, last_acc, cand, page_x, page_y,
+                      page_sizes, xs):
+                body = body_with(cand, page_x, page_y, page_sizes)
+                carry = jax.lax.scan(body, (w, sc, stopped, last_acc), xs)
+                return finish(*carry)
+        else:
+            def chunk(w, sc, stopped, last_acc, cand, xs):
+                body = body_with(cand, None, None, None)
+                carry = jax.lax.scan(body, (w, sc, stopped, last_acc), xs)
+                return finish(*carry)
+
         # donated carry: the chunk's (D[,_pad]) flat model, the strategy
-        # carry (FLrce's Ω/H and (M, D_pad) V/A maps), the cross-chunk stop
-        # flag and the accuracy scalar alias their outputs — no per-chunk
-        # copy of the O(M·D) state
+        # carry (FLrce's Ω/H and the V/A maps), the cross-chunk stop flag and
+        # the accuracy scalar alias their outputs — no per-chunk copy of the
+        # O(M·D) state.  The candidate remap and (paged) page tensors are
+        # fresh per-chunk inputs and are NOT donated: at pipeline depth 2 the
+        # two in-flight chunks each hold their own page.
         return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
 
-    def run_chunk(self, w, sc, stopped, last_acc, xs, use_prox: bool, has_mask: bool):
+    def run_chunk(self, w, sc, stopped, last_acc, cand, page, xs,
+                  use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)
         if key not in self._cache:
             shardings = None
@@ -287,7 +377,12 @@ class _ChunkRunner:
                     lambda l: l.sharding, (w, sc, stopped, last_acc)
                 )
             self._cache[key] = self._build(use_prox, has_mask, shardings)
-        return self._cache[key](w, sc, stopped, last_acc, xs)
+        if self.paged:
+            page_x, page_y, page_sizes = page
+            return self._cache[key](
+                w, sc, stopped, last_acc, cand, page_x, page_y, page_sizes, xs
+            )
+        return self._cache[key](w, sc, stopped, last_acc, cand, xs)
 
 
 @dataclasses.dataclass
@@ -296,10 +391,15 @@ class _ChunkPlan:
 
     t0: int
     r: int
-    cfg_grid: List[List[Any]]     # (R, M) LocalConfigs — reused at flush
+    cand: np.ndarray              # (n_cand,) sorted global candidate ids (real)
+    cand_dev: Any                 # (P_cand,) int32 device candidate remap
+    page: Optional[Tuple]         # paged store: (page_x, page_y, page_sizes_f)
+    cfg_grid: List[List[Any]]     # (R, n_cand) LocalConfigs — reused at flush
     xs: Tuple                     # the scan's stacked per-round inputs
     use_prox: bool
     has_mask: bool
+    sched_bytes: int              # host bytes of this chunk's schedules
+    page_bytes: int               # H2D bytes of this chunk's page (paged only)
 
 
 def run_scan_driver(
@@ -318,6 +418,7 @@ def run_scan_driver(
     chunk_rounds: int,
     mesh=None,
     pipeline: bool = True,
+    paged: bool = False,
 ):
     """Algorithm 4's outer loop as jitted round chunks.  Called by
     ``run_federated(driver="scan")`` — with ``mesh`` for
@@ -327,11 +428,24 @@ def run_scan_driver(
     pipeline — chunk k+1 is built, transferred and dispatched while the host
     consumes chunk k — ``pipeline=False`` is the strictly serial
     build → run → flush loop (same loop at depth 1, bitwise-equal results).
+
+    ``paged=True`` (``run_federated(client_store="paged")``) swaps the
+    device-resident client store for a :class:`HostClientStore`: the
+    (M, N_max, …) universe stays in host memory and each chunk uploads only
+    its candidate rows as a fresh slot-indexed page, double-buffered on the
+    same pipeline.  Device memory becomes O(P_cand) flat in M; with the
+    default full-universe candidates the results stay bitwise the resident
+    driver's.
     """
     from repro.fl.rounds import RoundRecord, finalize_result
 
     if chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    if paged and not strategy.supports_paged_store:
+        raise ValueError(
+            f"{strategy.name} does not support client_store='paged' "
+            "(supports_paged_store is False)"
+        )
     if mesh is not None:
         # O(D) strategy state (FLrce's V/A maps) moves onto the mesh BEFORE
         # the carry is exported, so scan_program() hands out sharded arrays
@@ -348,8 +462,13 @@ def run_scan_driver(
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
     w, unflatten = flatten_pytree(params)
-    # with a mesh the store is placed data-axis-sharded in ONE transfer
-    store = DeviceClientStore.from_dataset(dataset, mesh=mesh)
+    if paged:
+        # fleet-scale layout: the (M, N_max, …) universe stays HOST-side;
+        # chunks page their candidate rows on demand (O(P_cand) device memory)
+        store = HostClientStore.from_dataset(dataset)
+    else:
+        # with a mesh the store is placed data-axis-sharded in ONE transfer
+        store = DeviceClientStore.from_dataset(dataset, mesh=mesh)
     m = store.num_clients
     ledger = ResourceLedger(device=device)
     # the strategy's device-resident update post-processing (Fedcom top-k,
@@ -373,12 +492,12 @@ def run_scan_driver(
             NamedSharding(mesh, PartitionSpec(axes)),
         )
     runner = _ChunkRunner(
-        model, store, unflatten, program, transform,
+        model, None if paged else store, unflatten, program, transform,
         learning_rate=learning_rate, batch_size=batch_size,
         clients_per_round=strategy.p, eval_every=eval_every,
         max_rounds=max_rounds,
         eval_x=jnp.asarray(dataset.eval_x), eval_y=jnp.asarray(dataset.eval_y),
-        mesh=mesh,
+        mesh=mesh, paged=paged,
     )
 
     sc = program.carry
@@ -415,18 +534,68 @@ def run_scan_driver(
     # host-side chunk phases: build (pre-device) and flush (post-device)
     # ------------------------------------------------------------------
     def build_chunk(t0: int) -> _ChunkPlan:
-        """Everything a chunk needs before dispatch: configs, schedules,
-        variant inputs, H2D placement.  Pure host + async transfers — safe
-        to run one chunk ahead of the flush (all of it is a pure function
-        of ``(strategy, seed, t0)``, never of round results)."""
+        """Everything a chunk needs before dispatch: candidates, configs,
+        schedules, variant inputs, H2D placement (page included).  Pure host
+        + async transfers — safe to run one chunk ahead of the flush (all of
+        it is a pure function of ``(strategy, seed, t0)``, never of round
+        results)."""
         r = min(chunk_rounds, max_rounds - t0)
         ts = list(range(t0, t0 + r))
 
-        # per-(round, client) local configs: epochs/prox enter the compiled
-        # chunk; the ledger fractions are reused host-side at flush.  The
-        # None template means metadata-only (no mask materialization for all
-        # M clients) — client_config purity makes the forms interchangeable.
-        cfg_grid = [[strategy.client_config(t, cid, None) for cid in range(m)] for t in ts]
+        # ---- candidate set (the chunk program's client index space) -------
+        if program.select is None:
+            # host-precomputed selection: the candidate set is exactly the
+            # union of the chunk's cohorts — always exact.  Bucketed to a
+            # power of two (pad = duplicated last id) so the jitted chunk
+            # keeps a stable candidate-axis shape; pad slots are unreachable
+            # because host slots only point at real candidates.
+            host_ids = np.stack(
+                [np.asarray(strategy.select(t)) for t in ts]
+            ).astype(np.int64)
+            cand = np.unique(host_ids)
+            n_bucket = _bucket_candidates(len(cand), m)
+            cand_pad = np.concatenate(
+                [cand, np.full(n_bucket - len(cand), cand[-1], np.int64)]
+            )
+            host_slots = np.searchsorted(cand, host_ids).astype(np.int32)
+            phis = np.zeros(r, np.float32)
+        else:
+            # device-side selection: the strategy proposes a candidate
+            # superset (None ⇒ full universe — the exact-equivalence mode,
+            # where slots ≡ ids bitwise).  NEVER padded: ``top_k`` over the
+            # candidate heuristic could select a duplicated pad row.
+            host_ids = None
+            proposal = strategy.propose_candidates(np.asarray(ts))
+            if proposal is None:
+                cand = np.arange(m, dtype=np.int64)
+            else:
+                cand = np.asarray(proposal, np.int64)
+                if (
+                    cand.ndim != 1
+                    or len(cand) < strategy.p
+                    or len(np.unique(cand)) != len(cand)
+                    or np.any(np.diff(cand) < 0)
+                    or (len(cand) and (cand[0] < 0 or cand[-1] >= m))
+                ):
+                    raise ValueError(
+                        f"{strategy.name}.propose_candidates must return sorted "
+                        f"unique ids in [0, {m}) with P_cand >= P={strategy.p}; "
+                        f"got shape {cand.shape}"
+                    )
+            cand_pad = cand
+            host_slots = np.zeros((r, strategy.p), np.int32)
+            phis = program.explore_phis(np.asarray(ts))
+        n_cand = len(cand_pad)
+
+        # per-(round, candidate) local configs: epochs/prox enter the
+        # compiled chunk; the ledger fractions are reused host-side at flush.
+        # The None template means metadata-only (no mask materialization per
+        # candidate) — client_config purity makes the forms interchangeable.
+        # O(R · P_cand) host work, not O(R · M): only candidate columns exist.
+        cfg_grid = [
+            [strategy.client_config(t, int(cid), None) for cid in cand_pad]
+            for t in ts
+        ]
         for row in cfg_grid:
             for cfg in row:
                 if cfg.mask is not None:
@@ -439,15 +608,15 @@ def run_scan_driver(
         prox = np.asarray([[cfg.prox_mu for cfg in row] for row in cfg_grid], np.float32)
         use_prox = bool(np.any(prox > 0.0))
         # both the mesh chunks and device-side selection forbid per-cohort
-        # variants — one O(R·M) sweep establishes the invariant for either
-        # (cheap for a compliant strategy: its configs are metadata-only,
-        # and misuse costs an error, not silence)
+        # variants — one O(R·P_cand) sweep establishes the invariant for
+        # either (cheap for a compliant strategy: its configs are
+        # metadata-only, and misuse costs an error, not silence)
         if mesh is not None or program.select is not None:
             if any(
                 cfg.freeze_frac for row in cfg_grid for cfg in row
             ) or any(
-                strategy.client_config(t, cid, params).mask is not None
-                for t in ts for cid in range(m)
+                strategy.client_config(t, int(cid), params).mask is not None
+                for t in ts for cid in cand
             ):
                 raise ValueError(
                     f"{strategy.name} uses per-client masks or freeze flags; "
@@ -459,15 +628,15 @@ def run_scan_driver(
                        "is required)")
                 )
 
-        # batch schedules from the SAME fold-in streams the loop engines use
+        # batch schedules from the SAME fold-in streams the loop engines use;
+        # per-candidate columns (client_ids) keep host bytes O(P_cand), and
+        # the memo keys by GLOBAL id so dense and compact builds share hits
         sched = build_chunk_schedule(
-            store.sizes_host, epochs, batch_size, t0,
+            store.sizes_host[cand_pad], epochs, batch_size, t0,
             lambda t, cid: client_batch_rng(seed, t, cid),
-            cache_key=seed,
+            cache_key=seed, client_ids=cand_pad,
         )
         if program.select is None:
-            host_ids = np.stack([np.asarray(strategy.select(t)) for t in ts]).astype(np.int32)
-            phis = np.zeros(r, np.float32)
             # the selected cohorts are known, so per-round masks (Dropout)
             # and per-leaf freeze flags (TimelyFL) are materialized host-side
             # — pure re-invocation with the shape template — and ride into
@@ -506,8 +675,6 @@ def run_scan_driver(
             # device-side selection: the cohort is unknown at chunk build, so
             # per-round host-built variants cannot be gathered for it (no
             # masks/freeze — established by the shared sweep above)
-            host_ids = np.zeros((r, strategy.p), np.int32)
-            phis = program.explore_phis(np.asarray(ts))
             has_mask = False
             mask_xs = {}
             freeze_rounds = [
@@ -516,13 +683,27 @@ def run_scan_driver(
         freeze_xs = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *freeze_rounds)
 
         # fresh device buffers every chunk (double-buffered by construction):
-        # the async H2D copies for chunk k+1 overlap chunk k's execution and
-        # never alias the schedule tensors a running chunk still reads
+        # the async H2D copies for chunk k+1 — schedules, the candidate
+        # remap and (paged) the page — overlap chunk k's execution and never
+        # alias tensors a running chunk still reads
         bi_xs, sw_xs, sv_xs = place_schedule(sched, mesh)
+        cand32 = cand_pad.astype(np.int32)
+        if mesh is None:
+            cand_dev = jax.device_put(cand32)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            cand_dev = jax.device_put(cand32, NamedSharding(mesh, PartitionSpec()))
+        page = None
+        page_bytes = 0
+        if paged:
+            pstore = store.page(cand_pad, mesh=mesh)
+            page = (pstore.x, pstore.y, pstore.sizes.astype(jnp.float32))
+            page_bytes = int(pstore.x.nbytes) + int(pstore.y.nbytes)
         xs = (
             jnp.arange(t0, t0 + r, dtype=jnp.int32),
             jnp.asarray(phis),
-            jnp.asarray(host_ids),
+            jnp.asarray(host_slots),
             bi_xs,
             sw_xs,
             sv_xs,
@@ -530,8 +711,10 @@ def run_scan_driver(
             mask_xs,
             freeze_xs,
         )
-        return _ChunkPlan(t0=t0, r=r, cfg_grid=cfg_grid, xs=xs,
-                          use_prox=use_prox, has_mask=has_mask)
+        return _ChunkPlan(t0=t0, r=r, cand=cand, cand_dev=cand_dev, page=page,
+                          cfg_grid=cfg_grid, xs=xs,
+                          use_prox=use_prox, has_mask=has_mask,
+                          sched_bytes=int(sched.nbytes), page_bytes=page_bytes)
 
     records: List[RoundRecord] = []
 
@@ -546,7 +729,10 @@ def run_scan_driver(
             t = plan.t0 + i
             ids = [int(c) for c in outs["ids"][i]]
             for cid in ids:
-                cfg = plan.cfg_grid[i][cid]
+                # cfg_grid columns are candidate slots; recover the slot from
+                # the global id (cand is sorted unique, so searchsorted is an
+                # exact inverse for any selected id)
+                cfg = plan.cfg_grid[i][int(np.searchsorted(plan.cand, cid))]
                 flops = (
                     model.flops_per_sample() * int(store.sizes_host[cid])
                     * cfg.epochs * cfg.compute_fraction
@@ -597,6 +783,7 @@ def run_scan_driver(
     stats: Dict[str, Any] = {
         "driver": "scan",
         "pipeline": bool(pipeline),
+        "store": "paged" if paged else "resident",
         "chunks": 0,
         "speculative_chunks": 0,
         "cancelled_chunks": 0,
@@ -604,6 +791,9 @@ def run_scan_driver(
         "device_wait_s": 0.0,
         "host_flush_s": 0.0,
         "total_s": 0.0,
+        "schedule_bytes_host": 0,
+        "page_bytes_h2d": 0,
+        "peak_live_bytes": 0,
     }
     pending: "deque[Tuple[_ChunkPlan, Any]]" = deque()
     stopped = False
@@ -611,29 +801,36 @@ def run_scan_driver(
     last_exploit = False
     t_final = 0
     t_dispatch = 0
-    t_start = time.time()
+    t_start = time.perf_counter()
     flush_mark = t_start
     while pending or (t_dispatch < max_rounds and not stopped):
         # fill the pipeline: build chunk inputs (host), place them (async
         # H2D) and dispatch (async) — never blocking on in-flight chunks
         while len(pending) < depth and t_dispatch < max_rounds and not stopped:
-            b0 = time.time()
+            b0 = time.perf_counter()
             plan = build_chunk(t_dispatch)
             w, sc, es_flag, last_acc, outs = runner.run_chunk(
-                w, sc, es_flag, last_acc, plan.xs, plan.use_prox, plan.has_mask
+                w, sc, es_flag, last_acc, plan.cand_dev, plan.page, plan.xs,
+                plan.use_prox, plan.has_mask,
             )
-            stats["host_build_s"] += time.time() - b0
+            stats["host_build_s"] += time.perf_counter() - b0
+            stats["schedule_bytes_host"] += plan.sched_bytes
+            stats["page_bytes_h2d"] += plan.page_bytes
             if pending:
                 stats["speculative_chunks"] += 1
             pending.append((plan, outs))
             t_dispatch += plan.r
 
         plan, outs = pending.popleft()
-        w0 = time.time()
+        w0 = time.perf_counter()
         outs = jax.device_get(outs)            # the chunk's ONE host sync
-        stats["device_wait_s"] += time.time() - w0
+        stats["device_wait_s"] += time.perf_counter() - w0
+        # sampled when the pipeline is fullest (this chunk's buffers are
+        # still live, the next chunk's page/schedules already transferred) —
+        # the flat-in-M acceptance probe for the paged store
+        stats["peak_live_bytes"] = max(stats["peak_live_bytes"], _live_device_bytes())
 
-        f0 = time.time()
+        f0 = time.perf_counter()
         flushed, chunk_stopped = flush_chunk(plan, outs)
         if flushed:
             any_flushed = True
@@ -644,7 +841,7 @@ def run_scan_driver(
         # pipelining the phases overlap, so consecutive flush-to-flush
         # deltas are the partition of total wall time), amortized over the
         # flushed rounds
-        now = time.time()
+        now = time.perf_counter()
         wall, flush_mark = now - flush_mark, now
         for rec in records[-flushed:] if flushed else []:
             rec.wall_s = wall / flushed
@@ -656,14 +853,14 @@ def run_scan_driver(
             stats["cancelled_chunks"] += len(pending)
             pending.clear()
         stats["chunks"] += 1
-        stats["host_flush_s"] += time.time() - f0
+        stats["host_flush_s"] += time.perf_counter() - f0
         # the carry write-back waits until the carry is settled: with no
         # chunk in flight, ``sc`` is exactly the flushed state (serial mode:
         # every chunk; pipelined: the final chunk or the post-stop freeze)
         if not pending and any_flushed and program.finalize is not None:
             program.finalize(sc, t_final, last_exploit)
 
-    stats["total_s"] = time.time() - t_start
+    stats["total_s"] = time.perf_counter() - t_start
     return finalize_result(
         strategy=strategy,
         records=records,

@@ -30,8 +30,14 @@ class ScanProgram:
 
     * ``carry`` — initial device state carried across rounds (``{}`` for a
       stateless strategy).
-    * ``select(carry, t, phi) -> (carry, ids, exploited)`` — on-device
-      selection (Alg. 2 for FLrce).  ``None`` ⇒ selection is independent of
+    * ``select(carry, t, phi, cand) -> (carry, slots, exploited)`` —
+      on-device selection (Alg. 2 for FLrce) under the CANDIDATE-SET
+      contract: ``cand`` is the chunk's (P_cand,) sorted global candidate
+      ids (device array) and the returned ``slots`` are candidate-relative
+      indices — the driver recovers ids as ``cand[slots]`` and indexes the
+      per-candidate schedules/pages by slot.  The driver builds ``cand``
+      from :meth:`Strategy.propose_candidates` (full universe by default,
+      where slots ≡ ids bitwise).  ``None`` ⇒ selection is independent of
       round results and the driver precomputes a chunk's ids on host via the
       ordinary :meth:`Strategy.select` (FedAvg's NumPy draw).
     * ``post_round(carry, t, w_before, ids, update_matrix, exploited) ->
@@ -182,6 +188,34 @@ class Strategy:
     Strategies that keep the default False fall back to the sharded *loop*
     driver under ``driver="scan", engine="sharded"``.
     """
+
+    supports_paged_store: bool = True
+    """True ⇒ the scan driver may run this strategy against a host-paged
+    client store (``client_store="paged"``): only a chunk's candidate rows
+    are uploaded, and the chunk program sees slot-indexed pages/schedules.
+
+    Host-selected strategies get this for free (the candidate set is the
+    union of the chunk's cohorts — always exact).  Device-selecting
+    strategies must honor the candidate-set contract in their
+    ``ScanProgram.select`` (slots, not ids) and may narrow the candidates
+    via :meth:`propose_candidates`.  Only meaningful together with
+    ``supports_scan`` — the paged store exists only under ``driver="scan"``.
+    """
+
+    def propose_candidates(self, ts) -> Optional[np.ndarray]:
+        """Candidate superset for a chunk's device-side selection.
+
+        Called by the scan driver once per chunk (``ts`` = the chunk's round
+        indices) when the strategy selects on device.  Return a sorted
+        unique (P_cand,) int array of global client ids with P_cand ≥ P, or
+        ``None`` (the default) for the full universe — the exact-equivalence
+        mode, where device selection over the candidates is bitwise the
+        unrestricted draw.  A narrower proposal trades exactness for O(M) →
+        O(P_cand) host schedule work and device paging; selection then
+        happens WITHIN the proposal (explore sampling included), so the
+        proposal must already contain every client worth selecting.
+        """
+        return None
 
     def scan_program(self) -> ScanProgram:
         """The strategy's device-functional pieces for the scan driver.

@@ -39,13 +39,22 @@ END_MARKER = "<!-- END GENERATED MATRIX -->"
 _HEADER = (
     "| Strategy | `driver=\"loop\"` (sequential / batched / sharded) | "
     "`driver=\"scan\"` (engine=batched) | `driver=\"scan\"` (engine=sharded) | "
-    "Device update transform |\n"
-    "| --- | --- | --- | --- | --- |"
+    "`client_store=\"paged\"` | Device update transform |\n"
+    "| --- | --- | --- | --- | --- | --- |"
 )
 
 
 def _scan_cell(cls: Type[Strategy]) -> str:
     return "compiled" if cls.supports_scan else "falls back to batched loop"
+
+
+def _paged_cell(cls: Type[Strategy]) -> str:
+    # the paged store only exists under the compiled chunk drivers: a
+    # strategy that falls back to the loop driver cannot page (run_federated
+    # raises), and one may also opt out via supports_paged_store
+    if not cls.supports_scan:
+        return "n/a (needs compiled chunks)"
+    return "✓" if cls.supports_paged_store else "—"
 
 
 def _sharded_scan_cell(cls: Type[Strategy]) -> str:
@@ -64,7 +73,8 @@ def render_support_matrix() -> str:
     for cls in STRATEGY_CLASSES:
         rows.append(
             f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | "
-            f"{_sharded_scan_cell(cls)} | {_transform_cell(cls)} |"
+            f"{_sharded_scan_cell(cls)} | {_paged_cell(cls)} | "
+            f"{_transform_cell(cls)} |"
         )
     return "\n".join(rows)
 

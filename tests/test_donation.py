@@ -65,6 +65,7 @@ def test_chunk_carry_donated_in_place(tiny_fed):
     xs = (
         jnp.arange(r, dtype=jnp.int32),
         jnp.zeros(r, jnp.float32),
+        # full-universe candidates ⇒ host slots ≡ global ids
         jnp.asarray([[0, 1, 2], [3, 4, 5]], jnp.int32),
         jnp.asarray(sched.batch_idx),
         jnp.asarray(sched.sample_w),
@@ -73,20 +74,28 @@ def test_chunk_carry_donated_in_place(tiny_fed):
         {},
         jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *freeze_rounds),
     )
+    cand = jnp.arange(m, dtype=jnp.int32)
     dev = next(iter(w.devices()))
     last_acc = jax.device_put(jnp.float32(0.0), dev)
     stopped = jax.device_put(jnp.asarray(False), dev)
     ptr_w = w.unsafe_buffer_pointer()
-    w2, sc2, es2, acc2, outs = runner.run_chunk(w, {}, stopped, last_acc, xs, False, False)
+    ptr_cand = cand.unsafe_buffer_pointer()
+    w2, sc2, es2, acc2, outs = runner.run_chunk(
+        w, {}, stopped, last_acc, cand, None, xs, False, False
+    )
     assert w2.shape == w.shape
     assert w2.unsafe_buffer_pointer() == ptr_w          # aliased in place
     assert w.is_deleted()                                # donated input gone
     assert stopped.is_deleted()                          # stop flag donated too
+    # the candidate remap is a per-chunk INPUT, never donated (two in-flight
+    # pipelined chunks each hold their own)
+    assert not cand.is_deleted()
+    assert cand.unsafe_buffer_pointer() == ptr_cand
     # and the chunk really ran: both rounds produced valid outputs
     assert np.all(np.asarray(outs["valid"]))
     # a second chunk donates the returned carry the same way
     ptr_w2 = w2.unsafe_buffer_pointer()
-    w3, *_ = runner.run_chunk(w2, sc2, es2, acc2, xs, False, False)
+    w3, *_ = runner.run_chunk(w2, sc2, es2, acc2, cand, None, xs, False, False)
     assert w3.unsafe_buffer_pointer() == ptr_w2
     assert w2.is_deleted()
 

@@ -1,0 +1,399 @@
+"""Host-paged client store (``client_store="paged"``) + sketched V/A maps.
+
+The fleet-scale contracts of the scan driver:
+
+* paged ≡ resident — with full-universe candidates the paged driver's
+  records, ledger charges and written-back strategy state are BITWISE the
+  resident driver's, across pipeline on/off and single-device vs mesh;
+* host memory — per-cohort schedules are O(P_cand), not O(M), and a page's
+  H2D bytes are a small fraction of the universe;
+* int64 size accounting — flattened (client, sample) indices survive the
+  M·N_max > 2³¹ boundary where int32 silently wraps negative;
+* sketched V/A maps — ``va_rows=K`` replaces the (M, D) maps with K LRU
+  rows; with no evictions the sketch is bitwise the exact server, and the
+  LRU allocator pins cohort rows / evicts least-recently-active owners.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import flatten_pytree
+from repro.core.server import FLrceServer, sketch_assign_rows
+from repro.data import (
+    DeviceClientStore,
+    HostClientStore,
+    build_chunk_schedule,
+    flat_row_index,
+    make_federated_classification,
+    validate_store_geometry,
+)
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import Dropout, FedAvg, Fedprox, PyramidFL
+from repro.fl.client import client_batch_rng
+from repro.models.cnn import MLPClassifier
+
+MULTI = jax.device_count() >= 8
+needs8 = pytest.mark.skipif(
+    not MULTI,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_fed():
+    ds = make_federated_classification(
+        num_clients=10, alpha=0.2, num_samples=900, num_eval=160,
+        feature_dim=8, num_classes=3, seed=2,
+    )
+    return ds, MLPClassifier(feature_dim=8, num_classes=3, hidden=(16,))
+
+
+def _dim(model):
+    return flatten_pytree(model.init(jax.random.PRNGKey(0)))[0].shape[0]
+
+
+def _run(model, ds, strategy, *, store, pipeline=True, engine="batched", **kw):
+    kw.setdefault("max_rounds", 6)
+    kw.setdefault("eval_every", 2)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("learning_rate", 0.1)
+    return run_federated(
+        model, ds, strategy, engine=engine, driver="scan",
+        scan_chunk_rounds=3, pipeline=pipeline, client_store=store,
+        seed=0, **kw,
+    )
+
+
+def _assert_bitwise(res_a, res_b):
+    """Paged vs resident must match BITWISE, not within tolerance: the page
+    gather produces the identical cohort tensors, so every float downstream
+    is the same float."""
+    assert len(res_a.records) == len(res_b.records) > 0
+    for a, b in zip(res_a.records, res_b.records):
+        assert a.selected == b.selected
+        assert a.exploited == b.exploited
+        assert a.stopped == b.stopped
+        assert a.evaluated == b.evaluated
+        assert a.accuracy == b.accuracy
+        assert a.mean_client_loss == b.mean_client_loss or (
+            np.isnan(a.mean_client_loss) and np.isnan(b.mean_client_loss)
+        )
+        assert a.energy_kj == b.energy_kj
+        assert a.bytes_gb == b.bytes_gb
+    assert res_a.ledger.energy_j == res_b.ledger.energy_j
+    assert res_a.ledger.total_bytes == res_b.ledger.total_bytes
+    np.testing.assert_array_equal(
+        np.concatenate([np.ravel(l) for l in jax.tree_util.tree_leaves(res_a.final_params)]),
+        np.concatenate([np.ravel(l) for l in jax.tree_util.tree_leaves(res_b.final_params)]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# store layers: host store ≡ device store, pages ≡ rows
+# ---------------------------------------------------------------------------
+def test_host_store_matches_device_store(tiny_fed):
+    ds, _ = tiny_fed
+    host = HostClientStore.from_dataset(ds)
+    dev = DeviceClientStore.from_dataset(ds)
+    np.testing.assert_array_equal(host.x, np.asarray(dev.x))
+    np.testing.assert_array_equal(host.y, np.asarray(dev.y))
+    np.testing.assert_array_equal(host.sizes_host, dev.sizes_host)
+    assert host.sizes_host.dtype == np.int64
+    assert host.num_clients == dev.num_clients
+
+
+def test_page_rows_are_slot_indexed_slices(tiny_fed):
+    ds, _ = tiny_fed
+    host = HostClientStore.from_dataset(ds)
+    cand = np.asarray([1, 4, 7, 7], np.int64)   # duplicated pad id is legal
+    page = host.page(cand)
+    assert page.x.shape[0] == len(cand)
+    for slot, cid in enumerate(cand):
+        np.testing.assert_array_equal(np.asarray(page.x[slot]), host.x[cid])
+        np.testing.assert_array_equal(np.asarray(page.y[slot]), host.y[cid])
+        assert int(page.sizes[slot]) == int(host.sizes_host[cid])
+
+
+# ---------------------------------------------------------------------------
+# int64 size accounting at the overflow boundary
+# ---------------------------------------------------------------------------
+def test_flat_row_index_survives_int32_overflow():
+    m, n_max = 1 << 20, 1 << 12               # M·N_max = 2³² > int32 max
+    validate_store_geometry(m, n_max)          # representable in int64
+    idx = flat_row_index(np.asarray([m - 1]), np.asarray([n_max - 1]), n_max)
+    assert idx.dtype == np.int64
+    assert int(idx[0]) == m * n_max - 1        # positive: no silent wrap
+    # the int32 product this helper replaces really does wrap negative here
+    wrapped = np.int32(m - 1) * np.int32(n_max) + np.int32(n_max - 1)
+    assert int(wrapped) != m * n_max - 1
+
+
+def test_validate_store_geometry_rejects_unrepresentable():
+    with pytest.raises(ValueError, match="int32"):
+        validate_store_geometry(1, int(np.iinfo(np.int32).max) + 1)
+    with pytest.raises(ValueError, match="non-negative"):
+        validate_store_geometry(-1, 4)
+
+
+# ---------------------------------------------------------------------------
+# per-cohort schedules: O(P_cand) host bytes, bitwise the dense columns
+# ---------------------------------------------------------------------------
+def test_per_cohort_schedule_bytes_and_equality(tiny_fed):
+    ds, _ = tiny_fed
+    host = HostClientStore.from_dataset(ds)
+    m, r = host.num_clients, 3
+    rng_for = lambda t, cid: client_batch_rng(0, t, cid)
+    dense = build_chunk_schedule(
+        host.sizes_host, np.ones((r, m), np.int32), 16, 0, rng_for,
+    )
+    cand = np.asarray([2, 5, 8], np.int64)
+    sub = build_chunk_schedule(
+        host.sizes_host[cand], np.ones((r, len(cand)), np.int32), 16, 0,
+        rng_for, client_ids=cand,
+    )
+    # bitwise: a candidate column draws from the candidate's own global
+    # fold-in stream, independent of which other columns exist.  The step
+    # axis buckets to the CANDIDATES' max (≤ the dense bucket), so compare
+    # the overlap and check the dense tail is pure padding for these columns
+    s = sub.num_steps
+    assert s <= dense.num_steps
+    for slot, cid in enumerate(cand):
+        np.testing.assert_array_equal(sub.batch_idx[:, slot], dense.batch_idx[:, cid, :s])
+        np.testing.assert_array_equal(sub.sample_w[:, slot], dense.sample_w[:, cid, :s])
+        np.testing.assert_array_equal(sub.step_valid[:, slot], dense.step_valid[:, cid, :s])
+        assert not dense.step_valid[:, cid, s:].any()
+    # O(P_cand · S_cand) host bytes: the column fraction of the dense build
+    assert sub.nbytes * m * dense.num_steps == dense.nbytes * len(cand) * s
+
+
+def test_driver_schedule_bytes_scale_with_cohort(tiny_fed):
+    """The paged FedAvg driver's per-chunk schedules cover only the cohort
+    union, so total host schedule bytes undercut the dense O(M) build."""
+    ds, model = tiny_fed
+    res = _run(model, ds, FedAvg(10, 2, 1, seed=0), store="paged")
+    stats = res.driver_stats
+    assert stats["store"] == "paged"
+    assert stats["page_bytes_h2d"] > 0
+    assert stats["peak_live_bytes"] > 0
+    # what the dense O(M) build would have cost for the same two chunks
+    host = HostClientStore.from_dataset(ds)
+    dense = build_chunk_schedule(
+        host.sizes_host, np.ones((3, 10), np.int32), 16, 0,
+        lambda t, cid: client_batch_rng(0, t, cid),
+    )
+    # each 3-round chunk of P=2 cohorts has ≤ 6 distinct candidates → a pow2
+    # bucket of ≤ 8 columns vs M=10; the driver total must undercut dense
+    assert stats["schedule_bytes_host"] < 2 * dense.nbytes
+    assert stats["schedule_bytes_host"] <= 2 * dense.nbytes * 8 // 10
+
+
+# ---------------------------------------------------------------------------
+# paged ≡ resident, single device × pipeline on/off × strategies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_paged_matches_resident_fedavg(tiny_fed, pipeline):
+    ds, model = tiny_fed
+    mk = lambda: FedAvg(10, 3, 2, seed=0)
+    res_r = _run(model, ds, mk(), store="resident", pipeline=pipeline)
+    res_p = _run(model, ds, mk(), store="paged", pipeline=pipeline)
+    _assert_bitwise(res_r, res_p)
+    assert res_p.driver_stats["store"] == "paged"
+    assert res_r.driver_stats["store"] == "resident"
+
+
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_paged_matches_resident_flrce(tiny_fed, pipeline):
+    """Device-side selection with the default full-universe candidates is the
+    exact-equivalence mode: slots ≡ ids bitwise, server write-back included."""
+    ds, model = tiny_fed
+    dim = _dim(model)
+    mk = lambda: FLrce(
+        num_clients=10, clients_per_round=3, local_epochs=2, dim=dim,
+        es_threshold=1e9, seed=0,
+    )
+    s_r, s_p = mk(), mk()
+    res_r = _run(model, ds, s_r, store="resident", pipeline=pipeline)
+    res_p = _run(model, ds, s_p, store="paged", pipeline=pipeline)
+    _assert_bitwise(res_r, res_p)
+    # written-back server state (finalize) is bitwise too
+    np.testing.assert_array_equal(
+        np.asarray(s_r.server.state.heuristic), np.asarray(s_p.server.state.heuristic)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(s_r.server.state.omega), np.asarray(s_p.server.state.omega)
+    )
+    assert s_r.server.state.t == s_p.server.state.t
+
+
+def test_paged_matches_resident_with_masks(tiny_fed):
+    """Host-selected strategies with per-cohort variants (Dropout masks) page
+    exactly: masks are round-indexed, pages slot-indexed."""
+    ds, model = tiny_fed
+    mk = lambda: Dropout(10, 3, 2, seed=0, keep_rate=0.7)
+    res_r = _run(model, ds, mk(), store="resident")
+    res_p = _run(model, ds, mk(), store="paged")
+    _assert_bitwise(res_r, res_p)
+
+
+# ---------------------------------------------------------------------------
+# paged ≡ resident on the (2, 4) mesh
+# ---------------------------------------------------------------------------
+@needs8
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_paged_matches_resident_mesh(tiny_fed, pipeline):
+    ds, model = tiny_fed
+    dim = _dim(model)
+    mk = lambda: FLrce(
+        num_clients=10, clients_per_round=3, local_epochs=2, dim=dim,
+        es_threshold=1e9, seed=0,
+    )
+    res_r = _run(model, ds, mk(), store="resident", engine="sharded", pipeline=pipeline)
+    res_p = _run(model, ds, mk(), store="paged", engine="sharded", pipeline=pipeline)
+    _assert_bitwise(res_r, res_p)
+
+
+@needs8
+def test_paged_mesh_fedavg_matches_resident(tiny_fed):
+    ds, model = tiny_fed
+    mk = lambda: FedAvg(10, 3, 2, seed=0)
+    res_r = _run(model, ds, mk(), store="resident", engine="sharded")
+    res_p = _run(model, ds, mk(), store="paged", engine="sharded")
+    _assert_bitwise(res_r, res_p)
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+def test_paged_requires_scan_driver(tiny_fed):
+    ds, model = tiny_fed
+    with pytest.raises(ValueError, match="scan"):
+        run_federated(
+            model, ds, FedAvg(10, 3, 1, seed=0), driver="loop",
+            client_store="paged", max_rounds=1,
+        )
+
+
+def test_paged_rejects_loop_fallback(tiny_fed):
+    """A strategy that falls back to the loop driver cannot honor the paged
+    memory contract — hard error, never a silent fallback."""
+    ds, model = tiny_fed
+    with pytest.raises(ValueError, match="paged"):
+        run_federated(
+            model, ds, PyramidFL(10, 3, 2, seed=0), driver="scan",
+            client_store="paged", max_rounds=1,
+        )
+
+
+def test_candidate_proposal_validated(tiny_fed):
+    ds, model = tiny_fed
+    dim = _dim(model)
+    strat = FLrce(
+        num_clients=10, clients_per_round=3, local_epochs=1, dim=dim, seed=0,
+    )
+    strat.propose_candidates = lambda ts: np.asarray([3, 3, 5])  # not unique
+    with pytest.raises(ValueError, match="propose_candidates"):
+        _run(model, ds, strat, store="paged", max_rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# sketched V/A maps (va_rows=K)
+# ---------------------------------------------------------------------------
+def test_sketch_assign_rows_lru():
+    k, m = 3, 6
+    owner = jnp.full((k,), -1, jnp.int32)
+    slot = jnp.full((m,), -1, jnp.int32)
+    last = jnp.full((m,), -1, jnp.int32)
+    # first cohort fills empty rows in order
+    owner, slot, s1 = sketch_assign_rows(owner, slot, last, jnp.asarray([1, 4]))
+    assert sorted(int(x) for x in s1) == [0, 1]
+    last = last.at[jnp.asarray([1, 4])].set(0)
+    # returning client keeps its row; new client takes the remaining empty
+    owner, slot, s2 = sketch_assign_rows(owner, slot, last, jnp.asarray([2, 4]))
+    assert int(s2[1]) == int(s1[1])            # client 4 pinned to its row
+    assert int(s2[0]) == 2                     # client 2 → last empty row
+    last = last.at[jnp.asarray([2, 4])].set(1)
+    # full sketch: the least-recently-active owner (client 1, t=0) is evicted
+    owner, slot, s3 = sketch_assign_rows(owner, slot, last, jnp.asarray([0, 5]))
+    evicted_rows = sorted(int(x) for x in s3)
+    assert int(s1[0]) in evicted_rows          # client 1's row reassigned
+    assert int(slot[1]) == -1                  # back-pointer invalidated
+    assert int(slot[0]) in evicted_rows and int(slot[5]) in evicted_rows
+    # owners table is consistent with the slot table
+    for cid in range(m):
+        s = int(slot[cid])
+        if s >= 0:
+            assert int(owner[s]) == cid
+
+
+def test_sketched_server_no_eviction_bitwise():
+    """With K ≥ #distinct clients ever selected, the sketch never evicts and
+    the server's Ω/heuristic trajectories are bitwise the exact server's."""
+    m, dim, p = 6, 32, 2
+    mk = lambda k: FLrceServer(
+        num_clients=m, dim=dim, clients_per_round=p, es_threshold=1e9,
+        seed=0, va_rows=k,
+    )
+    exact = FLrceServer(
+        num_clients=m, dim=dim, clients_per_round=p, es_threshold=1e9, seed=0,
+    )
+    sketch = mk(4)                             # 4 < M ⇒ sketched path
+    assert sketch.sketched and not exact.sketched
+    rng = np.random.default_rng(0)
+    cohorts = [[0, 3], [1, 3], [0, 1], [2, 3]]  # 4 distinct ≤ K=4
+    for t, ids in enumerate(cohorts):
+        w = jnp.asarray(rng.normal(size=dim), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(p, dim)), jnp.float32)
+        for srv in (exact, sketch):
+            srv.ingest(w, np.asarray(ids), u)
+            srv.advance_round()
+    np.testing.assert_array_equal(
+        np.asarray(exact.state.omega), np.asarray(sketch.state.omega)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(exact.state.heuristic), np.asarray(sketch.state.heuristic)
+    )
+
+
+def test_sketched_driver_no_eviction_matches_exact(tiny_fed):
+    """End-to-end: a paged FLrce run whose sketch never evicts (K = M - 1 ≥
+    every distinct client selected in 2 rounds) is bitwise the exact run."""
+    ds, model = tiny_fed
+    dim = _dim(model)
+    mk = lambda k: FLrce(
+        num_clients=10, clients_per_round=3, local_epochs=1, dim=dim,
+        es_threshold=1e9, seed=0, va_rows=k,
+    )
+    res_e = _run(model, ds, mk(None), store="paged", max_rounds=2)
+    res_s = _run(model, ds, mk(9), store="paged", max_rounds=2)
+    # ≤ 6 distinct clients in 2 rounds of 3 < K=9 ⇒ no eviction possible
+    _assert_bitwise(res_e, res_s)
+
+
+def test_sketched_tight_runs_and_selects_validly(tiny_fed):
+    """A tight sketch (K = P + 1, evictions every chunk) still runs the whole
+    job with well-formed selections — the approximation degrades gracefully,
+    it never crashes or emits out-of-range ids."""
+    ds, model = tiny_fed
+    dim = _dim(model)
+    strat = FLrce(
+        num_clients=10, clients_per_round=3, local_epochs=1, dim=dim,
+        es_threshold=1e9, seed=0, va_rows=4, candidates_per_chunk=6,
+    )
+    res = _run(model, ds, strat, store="paged")
+    assert len(res.records) == 6
+    for rec in res.records:
+        assert len(rec.selected) == 3
+        assert all(0 <= c < 10 for c in rec.selected)
+        assert len(set(rec.selected)) == 3
+    assert np.isfinite(res.final_accuracy)
+
+
+def test_sketched_va_rejects_mesh(tiny_fed):
+    dim = 16
+    srv = FLrceServer(
+        num_clients=10, dim=dim, clients_per_round=3, es_threshold=1e9,
+        seed=0, va_rows=4,
+    )
+    with pytest.raises(ValueError, match="sketch"):
+        srv.bind_mesh(object(), ("data",))
