@@ -118,19 +118,24 @@ def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
             0, os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         )
         from benchmarks.common import per_round_wall
+    from repro.analysis.compile_guard import CompileCounter
     from repro.fl import run_federated
     from repro.fl.baselines import FedAvg
 
     if strategy_fn is None:
         strategy_fn = lambda: FedAvg(clients, clients, epochs, seed=0)
-    t0 = time.time()
-    res = run_federated(
-        model, ds, strategy_fn(),
-        max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
-        engine=engine, driver=driver, scan_chunk_rounds=chunk,
-        pipeline=pipeline, client_store=client_store,
-    )
-    wall = time.time() - t0
+    t0 = time.perf_counter()
+    with CompileCounter() as cc:
+        res = run_federated(
+            model, ds, strategy_fn(),
+            max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
+            engine=engine, driver=driver, scan_chunk_rounds=chunk,
+            pipeline=pipeline, client_store=client_store,
+        )
+    wall = time.perf_counter() - t0
+    # every leg reports how many XLA programs it compiled (the recompile
+    # sentinel); scan legs additionally carry driver_stats["compiles_chunk"]
+    res.driver_stats["bench_compiles"] = cc.compiles
     # exclude the compile-heavy warmup rounds (unless nothing would remain)
     per_round = per_round_wall(res, warmup)
     return res, wall, per_round
@@ -155,6 +160,25 @@ def _host_split(res) -> dict:
     }
 
 
+def _leg_compiles(res) -> dict:
+    """The leg's recompile-sentinel numbers for BENCH_engine.json: `total`
+    XLA programs compiled during the leg, and for scan legs `chunk` — the
+    compiles attributed to chunk dispatches (exactly 1 per job)."""
+    st = res.driver_stats
+    out = {"total": st.get("bench_compiles")}
+    if "compiles_chunk" in st:
+        out["chunk"] = st["compiles_chunk"]
+    return out
+
+
+def _assert_one_chunk_compile(res, leg: str) -> None:
+    got = res.driver_stats.get("compiles_chunk")
+    assert got == 1, (
+        f"{leg}: expected exactly 1 chunk compile per job, observed {got} — "
+        "a carry layout or candidate shape drifted between chunk dispatches "
+        "(the silent-recompile regression PR 5's layout pinning prevents)")
+
+
 def _assert_pipelined_identical(ser, pip, leg: str):
     """Pipelined ≡ serial must be EXACT: same compiled chunk program, same
     schedule streams — only the host's dispatch order differs."""
@@ -169,16 +193,22 @@ def _assert_pipelined_identical(ser, pip, leg: str):
     assert ser.ledger.energy_j == pip.ledger.energy_j, leg
 
 
-def write_report(path: str, per_round: dict, meta: dict) -> None:
+def write_report(path: str, per_round: dict, meta: dict,
+                 compiles: dict = None) -> None:
     import jax
 
+    compiles = compiles or {}
     report = {
         "benchmark": "engine",
         "devices": jax.device_count(),
         "backend": jax.default_backend(),
         **meta,
         "engines": {
-            eng: {"s_per_round": s, "rounds_per_s": (1.0 / s if s > 0 else None)}
+            eng: {
+                "s_per_round": s,
+                "rounds_per_s": (1.0 / s if s > 0 else None),
+                **({"compiles": compiles[eng]} if eng in compiles else {}),
+            }
             for eng, s in per_round.items()
         },
     }
@@ -204,6 +234,7 @@ def main(argv=None) -> int:
     if args.smoke:
         ds = _dataset(4, 128)
         per_round = {}
+        compiles = {}
 
         # scan driver leg: enough rounds for the per-chunk amortization to
         # show, against a batched run of the same length (timing + records)
@@ -217,6 +248,7 @@ def main(argv=None) -> int:
             "batched", ds, model, scan_rounds, clients=4, epochs=1,
             driver="scan", chunk=chunk, warmup=chunk, pipeline=False)
         assert res_scan.rounds_run == scan_rounds, res_scan.rounds_run
+        _assert_one_chunk_compile(res_scan, "scan")
         assert [r.selected for r in res_bat.records] == \
                [r.selected for r in res_scan.records]
         assert abs(res_bat.final_accuracy - res_scan.final_accuracy) < 2e-3, (
@@ -231,6 +263,7 @@ def main(argv=None) -> int:
             driver="scan", chunk=chunk, warmup=chunk, pipeline=True)
         _assert_pipelined_identical(res_scan, res_pip, "pipelined")
         assert res_pip.driver_stats["speculative_chunks"] > 0
+        _assert_one_chunk_compile(res_pip, "pipelined")
         speedup_pip = per_round["scan"] / per_round["pipelined"]
         host_split = {
             "scan": _host_split(res_scan),
@@ -251,6 +284,7 @@ def main(argv=None) -> int:
             "sharded", ds, model, scan_rounds, clients=4, epochs=1,
             driver="scan", chunk=chunk, warmup=chunk, pipeline=False)
         assert res_shs.rounds_run == scan_rounds, res_shs.rounds_run
+        _assert_one_chunk_compile(res_shs, "sharded_scan")
         assert [r.selected for r in res_shl.records] == \
                [r.selected for r in res_shs.records]
         assert abs(res_shl.final_accuracy - res_shs.final_accuracy) < 2e-3, (
@@ -265,6 +299,7 @@ def main(argv=None) -> int:
             "sharded", ds, model, scan_rounds, clients=4, epochs=1,
             driver="scan", chunk=chunk, warmup=chunk, pipeline=True)
         _assert_pipelined_identical(res_shs, res_shp, "sharded_pipelined")
+        _assert_one_chunk_compile(res_shp, "sharded_pipelined")
         speedup_shp = per_round["sharded_scan"] / per_round["sharded_pipelined"]
         host_split["sharded_scan"] = _host_split(res_shs)
         host_split["sharded_pipelined"] = _host_split(res_shp)
@@ -282,6 +317,7 @@ def main(argv=None) -> int:
             "batched", ds, model, scan_rounds, clients=4, epochs=1,
             driver="scan", chunk=chunk, warmup=chunk, strategy_fn=mk_fedcom)
         assert res_scan_c.rounds_run == scan_rounds, res_scan_c.rounds_run
+        _assert_one_chunk_compile(res_scan_c, "scan_fedcom")
         assert [r.selected for r in res_bat_c.records] == \
                [r.selected for r in res_scan_c.records]
         assert abs(res_bat_c.final_accuracy - res_scan_c.final_accuracy) < 2e-3, (
@@ -289,6 +325,16 @@ def main(argv=None) -> int:
         assert res_bat_c.ledger.total_bytes == res_scan_c.ledger.total_bytes, (
             res_bat_c.ledger.total_bytes, res_scan_c.ledger.total_bytes)
         speedup_c = per_round["batched_fedcom"] / per_round["scan_fedcom"]
+        compiles.update({
+            "batched": _leg_compiles(res_bat),
+            "scan": _leg_compiles(res_scan),
+            "pipelined": _leg_compiles(res_pip),
+            "sharded": _leg_compiles(res_shl),
+            "sharded_scan": _leg_compiles(res_shs),
+            "sharded_pipelined": _leg_compiles(res_shp),
+            "batched_fedcom": _leg_compiles(res_bat_c),
+            "scan_fedcom": _leg_compiles(res_scan_c),
+        })
 
         # fleet-scale paged store: client_store="paged" keeps the (M, N_max,
         # …) universe HOST-side and pages only each chunk's candidate rows,
@@ -313,10 +359,13 @@ def main(argv=None) -> int:
             st = res.driver_stats
             assert st["store"] == "paged" and st["peak_live_bytes"] > 0
             assert st["page_bytes_h2d"] > 0
-            return spr, st
+            _assert_one_chunk_compile(res, f"paged_fleet M={m_fleet}")
+            return spr, st, _leg_compiles(res)
 
-        per_round["paged_fleet_10k"], st_10k = fleet_leg(10_000)
-        per_round["paged_fleet_100k"], st_100k = fleet_leg(100_000)
+        per_round["paged_fleet_10k"], st_10k, compiles["paged_fleet_10k"] = \
+            fleet_leg(10_000)
+        per_round["paged_fleet_100k"], st_100k, compiles["paged_fleet_100k"] = \
+            fleet_leg(100_000)
         peak_10k = st_10k["peak_live_bytes"]
         peak_100k = st_100k["peak_live_bytes"]
         peak_ratio = peak_100k / max(peak_10k, 1)
@@ -342,7 +391,8 @@ def main(argv=None) -> int:
                       "pipeline_speedup_vs_scan": speedup_pip,
                       "sharded_pipeline_speedup_vs_sharded_scan": speedup_shp,
                       "paged_fleet": paged_fleet,
-                      "host_split": host_split})
+                      "host_split": host_split},
+                     compiles=compiles)
         print(f"engine-smoke OK: batched+sharded+scan+sharded_scan+pipelined, "
               f"acc={res_bat.final_accuracy:.3f}, scan {speedup:.2f}x batched, "
               f"fedcom scan {speedup_c:.2f}x batched, "
@@ -391,11 +441,13 @@ def main(argv=None) -> int:
     res_scan, _, per_round["scan"] = run(
         "batched", ds, model, args.rounds * 3, driver="scan",
         chunk=args.rounds, warmup=args.rounds, pipeline=False)
+    _assert_one_chunk_compile(res_scan, "scan")
     print(f"{'scan:':12s}{per_round['scan'] * 1e3:8.1f} ms/round")
     res_pip, _, per_round["pipelined"] = run(
         "batched", ds, model, args.rounds * 3, driver="scan",
         chunk=args.rounds, warmup=args.rounds, pipeline=True)
     _assert_pipelined_identical(res_scan, res_pip, "pipelined")
+    _assert_one_chunk_compile(res_pip, "pipelined")
     print(f"{'pipelined:':12s}{per_round['pipelined'] * 1e3:8.1f} ms/round")
     speedup = per_round["sequential"] / per_round["batched"]
     print(f"batched speedup: {speedup:8.2f}x")
@@ -414,7 +466,9 @@ def main(argv=None) -> int:
                   "pipeline_speedup_vs_scan":
                       per_round["scan"] / per_round["pipelined"],
                   "host_split": {"scan": _host_split(res_scan),
-                                 "pipelined": _host_split(res_pip)}})
+                                 "pipelined": _host_split(res_pip)}},
+                 compiles={"scan": _leg_compiles(res_scan),
+                           "pipelined": _leg_compiles(res_pip)})
     if speedup < 2.0:
         print("WARNING: batched engine below the 2x acceptance bar", file=sys.stderr)
         return 1

@@ -36,10 +36,10 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     for name, mod in modules.items():
-        t0 = time.time()
+        t0 = time.perf_counter()
         for row in mod.main():
             print(row)
-        print(f"_bench_module_{name},{(time.time() - t0) * 1e6:.0f},wall")
+        print(f"_bench_module_{name},{(time.perf_counter() - t0) * 1e6:.0f},wall")
     try:
         dump_summary()
     except Exception:

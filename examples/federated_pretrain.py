@@ -82,7 +82,7 @@ def main() -> None:
 
     total_steps = 0
     for t in range(args.rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()
         ids = server.select()
         w_before, unflatten = flatten_pytree(params)
         deltas, losses = [], []
@@ -109,7 +109,7 @@ def main() -> None:
             "mean_loss": round(float(np.mean(losses)), 4),
             "conflicts": round(server.state.last_conflicts, 3),
             "exploit": server.last_round_was_exploit,
-            "wall_s": round(time.time() - t0, 1),
+            "wall_s": round(time.perf_counter() - t0, 1),
         }))
         if stop:
             print(f"[fedlm] early stop at round {t} "

@@ -33,9 +33,9 @@ def main() -> None:
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = generate(model, params, prompts, args.gen, args.prompt_len + args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     new_tokens = args.batch * args.gen
     print(f"[serve] {cfg.name}: {args.batch} requests x {args.gen} new tokens "
           f"in {dt:.2f}s ({new_tokens / dt:.1f} tok/s on 1 CPU core)")

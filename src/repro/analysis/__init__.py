@@ -1,0 +1,46 @@
+"""repro.analysis: static invariant checks for the compiled FL hot path.
+
+The scan/pipelined/paged drivers (PRs 5-7) are fast because a set of
+invariants holds — donated carries are never read back, the hot path never
+syncs the host, traced index vectors are pinned replicated before mesh
+gathers, RNG keys derive from fold-in streams, durations use the monotonic
+clock, and a strategy's ``supports_*`` declarations match what it actually
+overrides.  Each invariant was bought with a debugging war story; this
+package turns them into lint passes (``flcheck``) so they are checked on
+every commit instead of re-discovered at runtime:
+
+    PYTHONPATH=src python -m repro.analysis src/ benchmarks/
+
+Every finding carries a rule ID and a fix-it message; a justified exception
+is silenced in place with ``# flcheck: disable=FLC00N`` on the offending
+line.  ``docs/invariants.md`` documents each rule and the PR/bug that
+motivated it (the rule table there is rendered by ``--rules`` and
+sync-tested).
+
+The runtime companion is :mod:`repro.analysis.compile_guard`: a
+``CompileCounter`` sentinel that counts XLA backend compilations via
+``jax.monitoring`` so tests and benchmarks can assert the chunk program
+compiles exactly once per job (the "pinned layouts => no silent recompiles"
+property from PR 5 as a checked number, not a comment).
+"""
+from repro.analysis.base import Finding, LintPass, RuleInfo
+from repro.analysis.runner import (
+    ALL_PASSES,
+    RULES,
+    lint_file,
+    lint_text,
+    render_rule_table,
+    run_paths,
+)
+
+__all__ = [
+    "ALL_PASSES",
+    "Finding",
+    "LintPass",
+    "RuleInfo",
+    "RULES",
+    "lint_file",
+    "lint_text",
+    "render_rule_table",
+    "run_paths",
+]

@@ -1,0 +1,71 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Exit 0 when no finding fires, 1 otherwise.  CI runs
+``python -m repro.analysis src/ benchmarks/`` before the test matrix.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis.conformance import ConformancePass
+from repro.analysis.runner import (
+    iter_python_files,
+    make_passes,
+    render_rule_table,
+    run_paths,
+)
+from repro.analysis.base import SourceFile
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="flcheck: compiled-path invariant lints for this repo",
+    )
+    parser.add_argument("paths", nargs="*", default=[],
+                        help="files or directories to lint")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated rule IDs or names "
+                             "(e.g. FLC005 or strategy-conformance)")
+    parser.add_argument("--rules", action="store_true",
+                        help="print the rule table (markdown) and exit")
+    parser.add_argument("--conformance-table", action="store_true",
+                        help="print the strategy conformance table "
+                             "(markdown, includes fallback_reason) and exit")
+    args = parser.parse_args(argv)
+
+    if args.rules:
+        print(render_rule_table())
+        return 0
+
+    if not args.paths:
+        parser.error("no paths given (try: python -m repro.analysis src/)")
+
+    select = args.select.split(",") if args.select else None
+
+    if args.conformance_table:
+        conf = ConformancePass()
+        for path in iter_python_files(args.paths):
+            with open(path, "r", encoding="utf-8") as fh:
+                conf.check(SourceFile(path, fh.read()))
+        print(conf.render_conformance_table())
+        return 0
+
+    findings = run_paths(args.paths, select=select)
+    for f in findings:
+        print(f.render())
+    if findings:
+        rules = sorted({f.rule_id for f in findings})
+        print(f"\nflcheck: {len(findings)} finding(s) [{', '.join(rules)}] — "
+              "fix or annotate `# flcheck: disable=RULE` with justification",
+              file=sys.stderr)
+        return 1
+    names = ", ".join(p.rule.rule_id for p in make_passes(select))
+    print(f"flcheck: clean ({names})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

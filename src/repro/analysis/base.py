@@ -1,0 +1,287 @@
+"""Shared lint infrastructure: findings, parsed sources, AST helpers.
+
+Everything here is stdlib-``ast`` only — the analyzer must run in CI before
+any heavyweight import, and must never need the code under analysis to be
+importable (it lints fixture snippets and broken work-in-progress files
+alike).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+#: ``# flcheck: disable=FLC001,FLC005`` (or ``disable=all``) on the
+#: offending line silences findings anchored there.  For multi-line
+#: statements the anchor is the statement's first line.
+_DISABLE_RE = re.compile(r"#\s*flcheck:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleInfo:
+    """Metadata for one lint rule (rendered into docs/invariants.md)."""
+
+    rule_id: str          # e.g. "FLC001"
+    name: str             # kebab-case slug, e.g. "donation-discipline"
+    invariant: str        # one-line statement of the invariant enforced
+    motivation: str       # the PR / bug that made this a rule
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule_id: str
+    path: str
+    line: int
+    col: int
+    message: str
+    fixit: str
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: {self.rule_id} "
+            f"{self.message}\n    fix: {self.fixit}"
+        )
+
+
+class SourceFile:
+    """One parsed module plus the lookup tables every pass shares."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self._disabled: Dict[int, Set[str]] = {}
+        for i, line in enumerate(text.splitlines(), start=1):
+            m = _DISABLE_RE.search(line)
+            if m:
+                self._disabled[i] = {
+                    r.strip().upper() for r in m.group(1).split(",") if r.strip()
+                }
+        self._scan_bodies: Optional[List[FunctionNode]] = None
+
+    # -- suppression -------------------------------------------------------
+    def disabled_at(self, line: int, rule_id: str) -> bool:
+        rules = self._disabled.get(line, ())
+        return rule_id.upper() in rules or "ALL" in rules
+
+    # -- tree navigation ---------------------------------------------------
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def enclosing_functions(self, node: ast.AST) -> List[FunctionNode]:
+        """Innermost-first chain of function scopes containing ``node``."""
+        out: List[FunctionNode] = []
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                out.append(cur)
+            cur = self.parent(cur)
+        return out
+
+    def functions(self) -> Iterator[Union[ast.FunctionDef, ast.AsyncFunctionDef]]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    # -- lax.scan body resolution -----------------------------------------
+    def scan_bodies(self) -> List[FunctionNode]:
+        """Function/lambda nodes passed as the body of a ``lax.scan``.
+
+        A name argument resolves to same-named ``def`` nodes anywhere in the
+        module (closures bound through factory calls — the scan driver's
+        ``body = body_with(...)`` — still resolve to the inner ``def body``,
+        which IS the traced body).
+        """
+        if self._scan_bodies is not None:
+            return self._scan_bodies
+        bodies: List[FunctionNode] = []
+        defs_by_name: Dict[str, List[ast.FunctionDef]] = {}
+        for fn in self.functions():
+            defs_by_name.setdefault(fn.name, []).append(fn)
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            callee = dotted_name(node.func)
+            if callee is None or not (
+                callee == "lax.scan" or callee.endswith(".lax.scan")
+            ):
+                continue
+            arg0 = node.args[0]
+            if isinstance(arg0, ast.Lambda):
+                bodies.append(arg0)
+            elif isinstance(arg0, ast.Name):
+                bodies.extend(defs_by_name.get(arg0.id, []))
+        self._scan_bodies = bodies
+        return bodies
+
+    def in_scan_body(self, node: ast.AST) -> bool:
+        bodies = set(map(id, self.scan_bodies()))
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if id(cur) in bodies:
+                return True
+            cur = self.parent(cur)
+        return False
+
+
+class LintPass:
+    """One rule: ``check(sf)`` per file, optional ``finalize()`` at the end
+    (for passes that need a cross-file view, e.g. strategy conformance)."""
+
+    rule: RuleInfo
+    fixit: str = ""
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        return []
+
+    def finalize(self) -> List[Finding]:
+        return []
+
+    def finding(self, sf: SourceFile, node: ast.AST, message: str,
+                fixit: Optional[str] = None) -> Optional[Finding]:
+        line = getattr(node, "lineno", 1)
+        if sf.disabled_at(line, self.rule.rule_id):
+            return None
+        return Finding(
+            rule_id=self.rule.rule_id,
+            path=sf.path,
+            line=line,
+            col=getattr(node, "col_offset", 0),
+            message=message,
+            fixit=fixit if fixit is not None else self.fixit,
+        )
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the passes
+# ---------------------------------------------------------------------------
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.lax.scan`` for nested Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+def assign_target_names(stmt: ast.stmt) -> Set[str]:
+    """Plain names (re)bound by an assignment-like statement, tuples included."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    names: Set[str] = set()
+    for t in targets:
+        for sub in ast.walk(t):
+            if isinstance(sub, ast.Name):
+                names.add(sub.id)
+    return names
+
+
+def flat_scope_statements(body: Sequence[ast.stmt]) -> List[ast.stmt]:
+    """Every statement lexically inside ``body``'s scope, source order,
+    excluding nested function/class scopes."""
+    out: List[ast.stmt] = []
+
+    def visit(stmts: Sequence[ast.stmt]) -> None:
+        for stmt in stmts:
+            out.append(stmt)
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            for field in ("body", "orelse", "finalbody"):
+                inner = getattr(stmt, field, None)
+                if inner:
+                    visit(inner)
+            for handler in getattr(stmt, "handlers", []) or []:
+                visit(handler.body)
+
+    visit(body)
+    out.sort(key=lambda s: (s.lineno, s.col_offset))
+    return out
+
+
+def names_loaded(node: ast.AST) -> Set[str]:
+    """Names read (Load context) anywhere under ``node``, nested scopes
+    excluded (closure reads are a separate concern)."""
+    loads: Set[str] = set()
+
+    def visit(n: ast.AST) -> None:
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef)):
+            return
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            loads.add(n.id)
+        for child in ast.iter_child_nodes(n):
+            visit(child)
+
+    visit(node)
+    return loads
+
+
+def parse_donate_argnums(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """The literal ``donate_argnums`` of a ``jax.jit`` call, else None."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out: List[int] = []
+            for el in v.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                    out.append(el.value)
+                else:
+                    return None     # non-literal: out of static reach
+            return tuple(out)
+        return None
+    return None
+
+
+def is_jit_call(call: ast.Call) -> bool:
+    name = call_name(call)
+    return name is not None and (name == "jit" or name.endswith(".jit"))
+
+def stmt_header_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    """Expressions evaluated *by this statement itself* (not by statements
+    nested under it, which the flat walk visits separately)."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [i.context_expr for i in stmt.items]
+    if isinstance(stmt, (ast.Try, ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return []
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value]
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.target, stmt.value]
+    if isinstance(stmt, ast.AnnAssign):
+        return [stmt.value] if stmt.value is not None else []
+    if isinstance(stmt, (ast.Return, ast.Expr)):
+        return [stmt.value] if stmt.value is not None else []
+    out: List[ast.expr] = []
+    for child in ast.iter_child_nodes(stmt):
+        if isinstance(child, ast.expr):
+            out.append(child)
+    return out

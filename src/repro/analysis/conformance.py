@@ -1,0 +1,245 @@
+"""FLC006 strategy-conformance.
+
+A strategy's ``supports_scan`` / ``supports_sharded_scan`` /
+``supports_paged_store`` declarations are promises the drivers trust at
+dispatch time; ``rounds.py`` raises at runtime when they're wrong, but
+only on the code path that happens to run.  This pass cross-checks the
+declarations against what each ``Strategy`` subclass actually overrides,
+statically and across files:
+
+1. ``supports_sharded_scan=True`` requires ``supports_scan=True`` — the
+   sharded engine compiles the same chunk program.
+2. ``supports_sharded_scan=True`` is incompatible with an
+   ``update_transform`` override — per-client transforms run in the
+   replicated chunk only (the support-matrix fallback rule, statically).
+3. ``supports_scan=True`` + a ``post_round`` override requires a
+   ``scan_program`` override: host-side ``post_round`` never runs inside a
+   compiled chunk, so the scan program must re-express it.
+4. ``process_update`` / ``processes_updates`` are removed hooks — defining
+   them means the class predates the update-transform contract.
+5. An explicit ``supports_scan = False`` must carry a machine-readable
+   ``fallback_reason`` string (rendered by the support matrix).
+6. An explicit ``supports_paged_store = True`` with resolved
+   ``supports_scan`` False is contradictory — the paged store only exists
+   under the chunked drivers.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+    dotted_name,
+)
+
+_SUPPORT_ATTRS = ("supports_scan", "supports_sharded_scan", "supports_paged_store")
+_ROOT_DEFAULTS = {
+    "supports_scan": False,
+    "supports_sharded_scan": False,
+    "supports_paged_store": True,
+}
+_REMOVED_HOOKS = ("process_update", "processes_updates")
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    bases: Tuple[str, ...]               # simple (last-segment) base names
+    attrs: Dict[str, bool]               # explicit literal support attrs
+    fallback_reason: Optional[str]       # explicit literal string, if any
+    methods: Tuple[str, ...]
+    sf: SourceFile
+    node: ast.ClassDef
+
+
+def _class_info(sf: SourceFile, node: ast.ClassDef) -> ClassInfo:
+    attrs: Dict[str, bool] = {}
+    fallback: Optional[str] = None
+    methods: List[str] = []
+    for stmt in node.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            methods.append(stmt.name)
+            continue
+        target: Optional[str] = None
+        value: Optional[ast.expr] = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            target, value = stmt.targets[0].id, stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            target, value = stmt.target.id, stmt.value
+        if target is None or value is None:
+            continue
+        if target in _SUPPORT_ATTRS and isinstance(value, ast.Constant) \
+                and isinstance(value.value, bool):
+            attrs[target] = value.value
+        elif target == "fallback_reason" and isinstance(value, ast.Constant) \
+                and isinstance(value.value, str):
+            fallback = value.value
+    bases = []
+    for b in node.bases:
+        nm = dotted_name(b)
+        if nm:
+            bases.append(nm.split(".")[-1])
+    return ClassInfo(
+        name=node.name,
+        bases=tuple(bases),
+        attrs=attrs,
+        fallback_reason=fallback,
+        methods=tuple(methods),
+        sf=sf,
+        node=node,
+    )
+
+
+class ConformancePass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC006",
+        name="strategy-conformance",
+        invariant=(
+            "`supports_*` declarations match the methods a Strategy "
+            "subclass actually overrides (and `supports_scan=False` "
+            "carries a `fallback_reason`)."
+        ),
+        motivation=(
+            "Misdeclared strategies fail at runtime dispatch in rounds.py — "
+            "but only on the driver path that happens to run; the checker "
+            "covers all paths on every commit."
+        ),
+    )
+    fixit = "align the supports_* declaration with the overridden methods"
+
+    def __init__(self) -> None:
+        self._classes: Dict[str, ClassInfo] = {}
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                info = _class_info(sf, node)
+                # last definition wins; strategy class names are unique
+                self._classes[info.name] = info
+        return []
+
+    # -- resolution over the cross-file class table ------------------------
+    def _is_strategy(self, name: str, seen: Optional[set] = None) -> bool:
+        if name == "Strategy":
+            return True
+        seen = seen or set()
+        if name in seen or name not in self._classes:
+            return False
+        seen.add(name)
+        return any(self._is_strategy(b, seen) for b in self._classes[name].bases)
+
+    def _resolved(self, name: str, attr: str) -> bool:
+        info = self._classes.get(name)
+        if info is None:
+            return _ROOT_DEFAULTS[attr]
+        if attr in info.attrs:
+            return info.attrs[attr]
+        for b in info.bases:
+            if b == "Strategy" and "Strategy" not in self._classes:
+                return _ROOT_DEFAULTS[attr]
+            if b in self._classes or b == "Strategy":
+                return self._resolved(b, attr)
+        return _ROOT_DEFAULTS[attr]
+
+    def strategies(self) -> List[ClassInfo]:
+        return [
+            info for name, info in sorted(self._classes.items())
+            if name != "Strategy" and self._is_strategy(name)
+        ]
+
+    def finalize(self) -> List[Finding]:
+        out: List[Optional[Finding]] = []
+        for info in self.strategies():
+            scan = self._resolved(info.name, "supports_scan")
+            sharded = self._resolved(info.name, "supports_sharded_scan")
+            paged = self._resolved(info.name, "supports_paged_store")
+            sf, node = info.sf, info.node
+            if sharded and not scan:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` declares supports_sharded_scan=True but "
+                    "resolves supports_scan=False — the sharded engine "
+                    "compiles the same chunk program",
+                    fixit="set supports_scan=True (and provide a ScanProgram)"
+                    " or drop the sharded_scan claim",
+                ))
+            if sharded and "update_transform" in info.methods:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` declares supports_sharded_scan=True but "
+                    "overrides `update_transform` — per-client transforms "
+                    "only run in the replicated chunk",
+                    fixit="set supports_sharded_scan=False (the support-"
+                    "matrix fallback rule) or fold the transform into the "
+                    "scan program",
+                ))
+            if scan and "post_round" in info.methods \
+                    and "scan_program" not in info.methods:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` declares supports_scan=True and "
+                    "overrides host-side `post_round` without overriding "
+                    "`scan_program` — post_round never runs inside a "
+                    "compiled chunk",
+                    fixit="override scan_program to re-express post_round "
+                    "device-side, or set supports_scan=False",
+                ))
+            for hook in _REMOVED_HOOKS:
+                if hook in info.methods:
+                    out.append(self.finding(
+                        sf, node,
+                        f"`{info.name}` defines removed hook `{hook}` — the "
+                        "update-transform contract replaced it",
+                        fixit="express the per-update change as "
+                        "`update_transform` (see docs/writing-a-strategy.md)",
+                    ))
+            if info.attrs.get("supports_scan") is False \
+                    and info.fallback_reason is None:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` opts out with supports_scan=False but "
+                    "has no `fallback_reason` string",
+                    fixit="add `fallback_reason = \"<why this strategy "
+                    "needs the host loop>\"` (rendered in "
+                    "docs/support-matrix.md)",
+                ))
+            if info.attrs.get("supports_paged_store") is True and not scan:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` explicitly claims supports_paged_store="
+                    "True while resolving supports_scan=False — the paged "
+                    "store only exists under the chunked drivers",
+                    fixit="drop the explicit supports_paged_store or add "
+                    "scan support",
+                ))
+        return [f for f in out if f is not None]
+
+    # -- docs: machine-readable conformance table --------------------------
+    def render_conformance_table(self) -> str:
+        """Markdown table of every collected Strategy subclass: resolved
+        declarations, the methods that matter to the contract, and the
+        machine-readable fallback reason (satellite of FLC006 check 5)."""
+        lines = [
+            "| strategy | scan | sharded_scan | paged | overrides | fallback_reason |",
+            "| --- | --- | --- | --- | --- | --- |",
+        ]
+        interesting = ("update_transform", "post_round", "scan_program",
+                       "propose_candidates")
+        for info in self.strategies():
+            scan = self._resolved(info.name, "supports_scan")
+            sharded = self._resolved(info.name, "supports_sharded_scan")
+            paged = self._resolved(info.name, "supports_paged_store")
+            overrides = ", ".join(m for m in interesting if m in info.methods) or "—"
+            reason = info.fallback_reason or "—"
+            lines.append(
+                f"| `{info.name}` | {'yes' if scan else 'no'} | "
+                f"{'yes' if sharded else 'no'} | {'yes' if paged else 'no'} | "
+                f"{overrides} | {reason} |"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,185 @@
+"""FLC001 donation-discipline.
+
+Two invariants around ``jax.jit(..., donate_argnums=...)``:
+
+1. A name passed in a donated position is dead after the call — its device
+   buffer now belongs to XLA.  Reading it later in the same scope (without a
+   rebind) is a use-after-donate: it works by accident on CPU and corrupts
+   or crashes on accelerators.
+2. Per-chunk candidate/page inputs must never sit in a donated position.
+   The pipelined driver (PR 6/7) keeps two chunks in flight, each holding
+   its own candidate remap and page tensors; donating them would let chunk
+   t+1's compile consume the buffers chunk t is still reading.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+    assign_target_names,
+    call_name,
+    dotted_name,
+    flat_scope_statements,
+    stmt_header_exprs,
+    is_jit_call,
+    names_loaded,
+    parse_donate_argnums,
+)
+
+#: Parameter-name prefixes that mark fresh per-chunk inputs (candidate
+#: remaps and host-paged tensors) which must never be donated.
+_NEVER_DONATE_PREFIXES = ("cand", "page")
+
+
+def is_jit_call_node(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    return name is not None and (name == "jit" or name.endswith(".jit"))
+
+
+class DonationPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC001",
+        name="donation-discipline",
+        invariant=(
+            "Names passed through a `donate_argnums` position are dead after "
+            "the call; per-chunk `cand*`/`page*` inputs are never donated."
+        ),
+        motivation=(
+            "PR 6 speculative dispatch + PR 7 paged store: two in-flight "
+            "chunks each hold their own candidate/page buffers, and a "
+            "donated carry read back on host corrupts the next dispatch."
+        ),
+    )
+    fixit = (
+        "rebind the result (`w = step(w, ...)`), or drop the position from "
+        "donate_argnums if the buffer must stay live"
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        findings: List[Finding] = []
+        findings.extend(self._check_never_donate_params(sf))
+        findings.extend(self._check_use_after_donate(sf))
+        return [f for f in findings if f is not None]
+
+    # -- rule A: cand/page parameters in donated positions -----------------
+    def _check_never_donate_params(self, sf: SourceFile) -> List[Optional[Finding]]:
+        defs: Dict[str, List[ast.FunctionDef]] = {}
+        for fn in sf.functions():
+            defs.setdefault(fn.name, []).append(fn)
+
+        out: List[Optional[Finding]] = []
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call) or not is_jit_call(call):
+                continue
+            donated = parse_donate_argnums(call)
+            if not donated or not call.args:
+                continue
+            inner = dotted_name(call.args[0])
+            if inner is None:
+                continue
+            # resolve the wrapped callable to a local def if we can
+            local = inner.split(".")[-1]
+            for fn in defs.get(local, []):
+                params = [a.arg for a in fn.args.args]
+                for pos in donated:
+                    if pos >= len(params):
+                        continue
+                    pname = params[pos]
+                    if pname.startswith(_NEVER_DONATE_PREFIXES):
+                        out.append(self.finding(
+                            sf, call,
+                            f"`{pname}` (param {pos} of `{fn.name}`) is a "
+                            "per-chunk candidate/page input but sits in a "
+                            "donated position",
+                            fixit=(
+                                "remove this position from donate_argnums: "
+                                "candidate remaps and page tensors are "
+                                "re-sent every chunk and two chunks may be "
+                                "in flight"
+                            ),
+                        ))
+        return out
+
+    # -- rule B: read-after-donate in the calling scope --------------------
+    def _check_use_after_donate(self, sf: SourceFile) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        # name -> donated positions, for `f = jax.jit(g, donate_argnums=...)`
+        # assignments and `@partial(jax.jit, donate_argnums=...)` decorators.
+        jitted: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                donated = parse_donate_argnums(node.value)
+                if donated and is_jit_call(node.value):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            jitted[t.id] = donated
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        donated = parse_donate_argnums(dec)
+                        if donated and (
+                            is_jit_call(dec)
+                            or (call_name(dec) in ("partial", "functools.partial")
+                                and dec.args
+                                and is_jit_call_node(dec.args[0]))
+                        ):
+                            jitted[node.name] = donated
+        if not jitted:
+            return out
+
+        scopes: List[List[ast.stmt]] = [sf.tree.body] + [
+            fn.body for fn in sf.functions()
+        ]
+        for body in scopes:
+            out.extend(self._scan_scope(sf, body, jitted))
+        return out
+
+    def _scan_scope(self, sf: SourceFile, body: List[ast.stmt],
+                    jitted: Dict[str, Tuple[int, ...]]) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        # Linear, line-ordered approximation: donate kills a name; any later
+        # Load of it (before a rebind) in the same scope is a violation.
+        # Compound statements contribute only their header expressions here —
+        # their nested statements appear later in the flat list themselves.
+        donated_names: Dict[str, int] = {}   # name -> line it was donated at
+        for stmt in flat_scope_statements(body):
+            exprs = stmt_header_exprs(stmt)
+            rebinds = assign_target_names(stmt)
+            reads: set = set()
+            calls: List[ast.Call] = []
+            for e in exprs:
+                reads |= names_loaded(e)
+                calls.extend(
+                    n for n in ast.walk(e)
+                    if isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Name)
+                    and n.func.id in jitted
+                )
+            for name in sorted(reads & set(donated_names)):
+                # `w = step(w, ...)` re-donating into a rebind of the same
+                # name is treated leniently (the common carry update shape)
+                if name in rebinds:
+                    continue
+                out.append(self.finding(
+                    sf, stmt,
+                    f"`{name}` is read after being donated at line "
+                    f"{donated_names[name]} (its device buffer was handed "
+                    "to XLA)",
+                ))
+                donated_names.pop(name, None)
+            for name in rebinds:
+                donated_names.pop(name, None)
+            for c in calls:
+                for pos in jitted[c.func.id]:  # type: ignore[union-attr]
+                    if pos < len(c.args) and isinstance(c.args[pos], ast.Name):
+                        nm = c.args[pos].id  # type: ignore[union-attr]
+                        if nm not in rebinds:
+                            donated_names[nm] = stmt.lineno
+        return out
+
+

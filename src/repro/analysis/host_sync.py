@@ -1,0 +1,123 @@
+"""FLC002 host-sync-hot-path.
+
+The chunk drivers' speed comes from never blocking the dispatch thread:
+the only host sync is the single ``jax.device_get`` per chunk at flush
+time, *outside* the build/dispatch closures.  Two kinds of hot scope are
+checked:
+
+* any ``lax.scan`` body, repo-wide — a traced scope where
+  ``block_until_ready`` / ``device_get`` / ``np.asarray`` / ``float()`` /
+  ``.item()`` either crash on tracers or silently force a transfer;
+* the build/dispatch closures of ``fl/scan_driver.py``
+  (``build_chunk`` / ``run_chunk`` / ``_build`` and anything nested in
+  them) — host Python, but on the critical path that must stay async, so
+  ``block_until_ready`` / ``device_get`` are banned there (``np.asarray``
+  on host metadata is fine).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.base import (
+    Finding,
+    FunctionNode,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+)
+
+_TRACED_BANNED_CALLS = {
+    "block_until_ready",
+    "device_get",
+    "asarray",      # matched only for an np/numpy prefix, see below
+    "float",
+    "item",
+}
+_DISPATCH_BANNED = {"block_until_ready", "device_get"}
+_DISPATCH_SCOPE_NAMES = {"build_chunk", "run_chunk", "_build"}
+
+
+def _banned_kind(call: ast.Call, banned: Set[str]) -> Optional[str]:
+    # attribute call:  x.block_until_ready(), jax.device_get(...), w.item()
+    if isinstance(call.func, ast.Attribute):
+        attr = call.func.attr
+        if attr in ("block_until_ready", "item") and attr in banned:
+            return f".{attr}()"
+        if attr == "device_get" and "device_get" in banned:
+            return "device_get"
+        if attr == "asarray" and "asarray" in banned:
+            base = call.func.value
+            if isinstance(base, ast.Name) and base.id in ("np", "numpy", "onp"):
+                return f"{base.id}.asarray"
+        return None
+    if isinstance(call.func, ast.Name):
+        fn = call.func.id
+        if fn in ("block_until_ready", "device_get") and fn in banned:
+            return fn
+        if fn == "float" and "float" in banned:
+            return "float()"
+    return None
+
+
+class HostSyncPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC002",
+        name="host-sync-hot-path",
+        invariant=(
+            "No `block_until_ready`/`device_get`/`np.asarray`/`float()`/"
+            "`.item()` inside `lax.scan` bodies; no `block_until_ready`/"
+            "`device_get` inside scan_driver build/dispatch closures."
+        ),
+        motivation=(
+            "PR 6 pipelined dispatch: the only permitted host sync is one "
+            "`device_get` per chunk at flush; a sync in the dispatch path "
+            "collapses the two-deep pipeline back to serial."
+        ),
+    )
+    fixit = (
+        "move the sync out of the hot scope (flush-time `device_get` is the "
+        "one sanctioned sync), or keep the value traced"
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out: List[Optional[Finding]] = []
+        out.extend(self._check_scan_bodies(sf))
+        if sf.path.replace("\\", "/").endswith("fl/scan_driver.py"):
+            out.extend(self._check_dispatch_scopes(sf))
+        return [f for f in out if f is not None]
+
+    def _check_scan_bodies(self, sf: SourceFile) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        for body_fn in sf.scan_bodies():
+            for node in ast.walk(body_fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                kind = _banned_kind(node, _TRACED_BANNED_CALLS)
+                if kind:
+                    out.append(self.finding(
+                        sf, node,
+                        f"`{kind}` inside a `lax.scan` body — this scope is "
+                        "traced; host syncs either crash on tracers or "
+                        "silently devolve to per-step transfers",
+                    ))
+        return out
+
+    def _check_dispatch_scopes(self, sf: SourceFile) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        hot: List[FunctionNode] = [
+            fn for fn in sf.functions() if fn.name in _DISPATCH_SCOPE_NAMES
+        ]
+        for scope in hot:
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                kind = _banned_kind(node, _DISPATCH_BANNED)
+                if kind:
+                    out.append(self.finding(
+                        sf, node,
+                        f"`{kind}` inside dispatch closure `{scope.name}` — "
+                        "build/dispatch must stay async; the flush step owns "
+                        "the one per-chunk sync",
+                    ))
+        return out

@@ -1,0 +1,130 @@
+"""FLC004 rng-discipline.
+
+Engine/driver/strategy randomness must derive keys from fold-in style
+streams (``fold_in(seed, t, cid)``, ``client_batch_rng``) so that a round's
+draws are a pure function of (seed, round, client) — the property that
+makes the scan driver's compiled rounds replayable and the pipelined
+driver's speculative chunks identical to serial execution.
+
+Two statically checkable violations of that discipline:
+
+* **split-and-reuse** — ``jax.random.split(key)`` consumes ``key``; using
+  the same (unrebound) name as the key argument of a later draw reuses
+  entropy that was already handed out.
+* **same-key double draw** — two different sampling calls keyed by the
+  same unrebound name produce correlated draws (classic copy-paste bug).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+    assign_target_names,
+    call_name,
+    flat_scope_statements,
+    stmt_header_exprs,
+)
+
+#: jax.random.* callees that CONSUME a key without counting as a draw
+_KEY_OPS = {"split", "fold_in", "PRNGKey", "key", "clone", "wrap_key_data"}
+
+
+def _random_call(node: ast.expr) -> Optional[str]:
+    """The callee tail for `jax.random.X(...)` / `random.X(...)` /
+    `jrandom.X(...)` calls, else None.  NumPy's stateful `np.random.*`
+    API has no key discipline to enforce and is excluded."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = call_name(node)
+    if name is None:
+        return None
+    parts = name.split(".")
+    if len(parts) >= 3 and parts[-3] in ("np", "numpy", "onp"):
+        return None
+    if len(parts) >= 2 and parts[-2] in ("random", "jrandom", "jrand"):
+        return parts[-1]
+    return None
+
+
+def _key_arg(call: ast.Call) -> Optional[str]:
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+class RngPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC004",
+        name="rng-discipline",
+        invariant=(
+            "RNG keys derive via fold_in-style streams; a key passed to "
+            "`split` is consumed, and no key feeds two draws unrebound."
+        ),
+        motivation=(
+            "Replayable compiled rounds: draws must be pure in "
+            "(seed, round, client) or speculative pipelined chunks diverge "
+            "from serial execution."
+        ),
+    )
+    fixit = (
+        "derive a fresh stream instead: `k = jax.random.fold_in(seed_key, "
+        "step)` or rebind through `key, sub = jax.random.split(key)`"
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out: List[Optional[Finding]] = []
+        for fn in sf.functions():
+            out.extend(self._check_scope(sf, fn.body))
+        out.extend(self._check_scope(sf, sf.tree.body))
+        return [f for f in out if f is not None]
+
+    def _check_scope(self, sf: SourceFile, body: List[ast.stmt]) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        consumed: Dict[str, int] = {}          # key name -> line split() ate it
+        drawn: Dict[str, Tuple[str, int]] = {} # key name -> (draw callee, line)
+        for stmt in flat_scope_statements(body):
+            rebinds = assign_target_names(stmt)
+            calls: List[ast.Call] = [
+                n for e in stmt_header_exprs(stmt)
+                for n in ast.walk(e) if isinstance(n, ast.Call)
+            ]
+            for c in calls:
+                callee = _random_call(c)
+                if callee is None:
+                    continue
+                key = _key_arg(c)
+                if key is None:
+                    continue
+                if key in consumed and key not in rebinds:
+                    out.append(self.finding(
+                        sf, c,
+                        f"key `{key}` was consumed by `split` at line "
+                        f"{consumed[key]} but is reused here — split-and-"
+                        "reuse hands out the same entropy twice",
+                    ))
+                    consumed.pop(key, None)
+                elif callee not in _KEY_OPS and key in drawn and key not in rebinds:
+                    prev_callee, prev_line = drawn[key]
+                    out.append(self.finding(
+                        sf, c,
+                        f"key `{key}` already keyed `{prev_callee}` at line "
+                        f"{prev_line}; drawing `{callee}` from it again "
+                        "produces correlated samples",
+                    ))
+                    drawn.pop(key, None)
+                if callee == "split" and key not in rebinds:
+                    consumed[key] = c.lineno
+                elif callee not in _KEY_OPS and key not in rebinds:
+                    drawn[key] = (callee, c.lineno)
+            for name in rebinds:
+                consumed.pop(name, None)
+                drawn.pop(name, None)
+        return out

@@ -1,0 +1,116 @@
+"""Pass runner: walk paths, run every lint pass, aggregate findings.
+
+Passes are stateless per run *except* the conformance pass, which builds a
+cross-file class table in ``check`` and reports from ``finalize`` — so a
+fresh set of pass instances is created for every run.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+from repro.analysis.base import Finding, LintPass, RuleInfo, SourceFile
+from repro.analysis.conformance import ConformancePass
+from repro.analysis.donation import DonationPass
+from repro.analysis.host_sync import HostSyncPass
+from repro.analysis.rng import RngPass
+from repro.analysis.sharding_pin import ShardingPinPass
+from repro.analysis.wallclock import WallClockPass
+
+#: Registration order == rule-ID order == docs order.
+ALL_PASSES: Tuple[Type[LintPass], ...] = (
+    DonationPass,
+    HostSyncPass,
+    ShardingPinPass,
+    RngPass,
+    WallClockPass,
+    ConformancePass,
+)
+
+RULES: Dict[str, RuleInfo] = {cls.rule.rule_id: cls.rule for cls in ALL_PASSES}
+
+
+def make_passes(select: Optional[Iterable[str]] = None) -> List[LintPass]:
+    wanted = {s.strip().upper() for s in select} if select is not None else None
+    passes: List[LintPass] = []
+    for cls in ALL_PASSES:
+        if wanted is None or cls.rule.rule_id in wanted or \
+                cls.rule.name.upper() in wanted:
+            passes.append(cls())
+    return passes
+
+
+def _run(sources: Sequence[SourceFile],
+         passes: Sequence[LintPass]) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in sources:
+        for p in passes:
+            findings.extend(p.check(sf))
+    for p in passes:
+        findings.extend(p.finalize())
+    findings.sort(key=lambda f: (f.path, f.line, f.rule_id))
+    return findings
+
+
+def lint_text(text: str, path: str = "<string>",
+              select: Optional[Iterable[str]] = None,
+              passes: Optional[Sequence[LintPass]] = None) -> List[Finding]:
+    """Lint one source snippet (the test-fixture entry point)."""
+    active = list(passes) if passes is not None else make_passes(select)
+    return _run([SourceFile(path, text)], active)
+
+
+def lint_file(path: str,
+              select: Optional[Iterable[str]] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as fh:
+        return lint_text(fh.read(), path, select=select)
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(
+                d for d in dirs
+                if d not in ("__pycache__", ".git") and not d.endswith(".egg-info")
+            )
+            for name in sorted(files):
+                if name.endswith(".py"):
+                    yield os.path.join(root, name)
+
+
+def run_paths(paths: Sequence[str],
+              select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint every ``*.py`` under ``paths`` with one shared pass set (so the
+    conformance pass sees the whole class hierarchy at once)."""
+    passes = make_passes(select)
+    sources: List[SourceFile] = []
+    for path in iter_python_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        try:
+            sources.append(SourceFile(path, text))
+        except SyntaxError as exc:
+            raise SystemExit(f"flcheck: cannot parse {path}: {exc}")
+    return _run(sources, passes)
+
+
+DOC_BEGIN_MARKER = "<!-- BEGIN GENERATED RULE TABLE: python -m repro.analysis --rules -->"
+DOC_END_MARKER = "<!-- END GENERATED RULE TABLE -->"
+
+
+def render_rule_table() -> str:
+    """The rule table embedded in docs/invariants.md (sync-tested)."""
+    lines = [
+        "| rule | name | invariant | motivation |",
+        "| --- | --- | --- | --- |",
+    ]
+    for cls in ALL_PASSES:
+        r = cls.rule
+        lines.append(
+            f"| {r.rule_id} | `{r.name}` | {r.invariant} | {r.motivation} |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,114 @@
+"""FLC003 sharding-pin.
+
+The PR 5 GSPMD bug as a rule: inside a scan body that runs under a mesh,
+an integer index vector built by ``concatenate``/``unique`` gets a layout
+chosen by the partitioner — if it is then used to gather rows of a sharded
+tensor without an explicit ``with_sharding_constraint``, GSPMD may decide
+to row-partition the gather differently per chunk, silently recompiling
+the whole scan.  The fix (and the rule): pin the index vector replicated
+before it reaches a subscript.
+
+Scope is deliberately narrow to avoid false positives: only modules that
+mention mesh machinery (``shard_map`` / ``NamedSharding`` /
+``with_sharding_constraint``), only inside resolved ``lax.scan`` bodies,
+and only names assigned *directly* from ``concatenate``/``unique`` calls.
+The linear line-order approximation biases toward false negatives.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+    call_name,
+    flat_scope_statements,
+)
+
+_PRODUCERS = ("concatenate", "unique")
+_MESH_MARKERS = ("shard_map", "NamedSharding", "with_sharding_constraint")
+
+
+def _producer_call(node: ast.expr) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    if name is None:
+        return False
+    tail = name.split(".")[-1]
+    return tail in _PRODUCERS
+
+
+def _pin_call(node: ast.expr) -> bool:
+    """True for `[jax.][lax.]with_sharding_constraint(x, ...)`."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = call_name(node)
+    return name is not None and name.split(".")[-1] == "with_sharding_constraint"
+
+
+class ShardingPinPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC003",
+        name="sharding-pin",
+        invariant=(
+            "In a mesh-module scan body, index vectors from "
+            "`concatenate`/`unique` must pass through "
+            "`with_sharding_constraint` before indexing into a tensor."
+        ),
+        motivation=(
+            "PR 5: GSPMD row-partitioned an unpinned gather index, changing "
+            "layouts between chunks and silently recompiling every chunk."
+        ),
+    )
+    fixit = (
+        "pin the index replicated first: "
+        "`idx = jax.lax.with_sharding_constraint(idx, rep_sharding)`"
+    )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        if not any(marker in sf.text for marker in _MESH_MARKERS):
+            return []
+        out: List[Optional[Finding]] = []
+        for body_fn in sf.scan_bodies():
+            if isinstance(body_fn, ast.Lambda):
+                continue
+            out.extend(self._check_body(sf, body_fn))
+        return [f for f in out if f is not None]
+
+    def _check_body(self, sf: SourceFile, body_fn: ast.FunctionDef) -> List[Optional[Finding]]:
+        out: List[Optional[Finding]] = []
+        tainted: Set[str] = set()
+        for stmt in flat_scope_statements(body_fn.body):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                target = stmt.targets[0].id
+                if _producer_call(stmt.value):
+                    tainted.add(target)
+                    continue
+                if _pin_call(stmt.value):
+                    arg0 = stmt.value.args[0] if stmt.value.args else None
+                    if isinstance(arg0, ast.Name) and arg0.id in tainted:
+                        tainted.discard(arg0.id)
+                        # the pinned result (any target name) is clean
+                    tainted.discard(target)
+                    continue
+                # plain reassignment clears taint on the target
+                tainted.discard(target)
+            # any subscript whose slice reads a tainted name = violation
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Subscript):
+                    for sub in ast.walk(node.slice):
+                        if isinstance(sub, ast.Name) and sub.id in tainted:
+                            out.append(self.finding(
+                                sf, node,
+                                f"index vector `{sub.id}` (from "
+                                "concatenate/unique) reaches a gather "
+                                "without a `with_sharding_constraint` pin — "
+                                "GSPMD may re-partition it per chunk",
+                            ))
+                            tainted.discard(sub.id)
+        return out

@@ -1,0 +1,50 @@
+"""FLC005 wall-clock.
+
+``time.time()`` is not monotonic — NTP slews and clock steps show up as
+negative or inflated durations, and every throughput number the benchmark
+suite reports is a duration.  ``time.perf_counter()`` is the only clock
+allowed for timing; a genuine timestamp (epoch seconds for a report
+header) keeps ``time.time()`` under an explicit
+``# flcheck: disable=FLC005``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+    call_name,
+)
+
+
+class WallClockPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC005",
+        name="wall-clock",
+        invariant=(
+            "Durations use `time.perf_counter()`; `time.time()` is banned "
+            "(timestamps need an explicit disable comment)."
+        ),
+        motivation=(
+            "PR 7 migrated fl/ to the monotonic clock; benchmark legs were "
+            "still subtracting wall-clock times that NTP can rewind."
+        ),
+    )
+    fixit = "use `time.perf_counter()` (monotonic) for anything subtracted"
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out: List[Optional[Finding]] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if call_name(node) == "time.time":
+                out.append(self.finding(
+                    sf, node,
+                    "`time.time()` used — wall clock is not monotonic, so "
+                    "durations computed from it can go negative",
+                ))
+        return [f for f in out if f is not None]

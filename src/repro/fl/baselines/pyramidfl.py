@@ -14,12 +14,15 @@ from repro.fl.strategy import LocalConfig, Strategy
 
 class PyramidFL(Strategy):
     name = "pyramidfl"
-    # The one remaining loop-only strategy (docs/support-matrix.md): both
-    # selection and the pyramid epoch plan depend on the previous rounds'
-    # observed losses, so a chunk's cohorts/epochs cannot be precomputed on
-    # host and the batch schedules cannot be built ahead of the scan.
-    # driver="scan" falls back to the batched loop.
+    # The one remaining loop-only strategy: driver="scan" falls back to the
+    # batched loop for the machine-readable reason below (rendered into
+    # docs/support-matrix.md and the FLC006 conformance table).
     supports_scan = False
+    fallback_reason = (
+        "selection and the pyramid epoch plan depend on the previous "
+        "round's observed losses, so cohorts/epochs and batch schedules "
+        "cannot be precomputed ahead of a chunk"
+    )
 
     def __init__(self, *args, explore_frac: float = 0.2, min_epoch_frac: float = 0.4, **kwargs):
         super().__init__(*args, **kwargs)

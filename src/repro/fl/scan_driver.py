@@ -79,6 +79,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.compile_guard import CompileCounter
 from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
 from repro.data.device import (
     ChunkSchedule,
@@ -175,6 +176,10 @@ class _ChunkRunner:
             self.n_data = mesh.shape[self._trainer.data_axis]
             self.p_pad = pad_dim(clients_per_round, self.n_data)
         self._cache: Dict[Tuple[bool, bool], Any] = {}
+        # computed here (setup, outside the dispatch loop) so the recompile
+        # sentinel's per-dispatch delta sees only the chunk program itself,
+        # not this one-off convert on a cold jit cache
+        self._sizes_f = None if paged else store.sizes.astype(jnp.float32)
 
     def _build(self, use_prox: bool, has_mask: bool, carry_shardings=None):
         store, program, unflatten = self.store, self.program, self.unflatten
@@ -182,7 +187,7 @@ class _ChunkRunner:
         paged = self.paged
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
-        sizes_f = None if paged else store.sizes.astype(jnp.float32)
+        sizes_f = self._sizes_f
         if mesh is None:
             train = self._train_raw
         else:
@@ -687,13 +692,18 @@ def run_scan_driver(
         # remap and (paged) the page — overlap chunk k's execution and never
         # alias tensors a running chunk still reads
         bi_xs, sw_xs, sv_xs = place_schedule(sched, mesh)
-        cand32 = cand_pad.astype(np.int32)
+        # every other chunk input is pinned to an explicit replicated
+        # placement: an unpinned single-device array would be resharded by
+        # every mesh dispatch through jitted slice helpers — a per-chunk
+        # recompile the engine's compile sentinel rejects
         if mesh is None:
-            cand_dev = jax.device_put(cand32)
+            put = jax.device_put
         else:
             from jax.sharding import NamedSharding, PartitionSpec
 
-            cand_dev = jax.device_put(cand32, NamedSharding(mesh, PartitionSpec()))
+            rep = NamedSharding(mesh, PartitionSpec())
+            put = lambda a: jax.device_put(a, rep)
+        cand_dev = put(cand_pad.astype(np.int32))
         page = None
         page_bytes = 0
         if paged:
@@ -701,15 +711,15 @@ def run_scan_driver(
             page = (pstore.x, pstore.y, pstore.sizes.astype(jnp.float32))
             page_bytes = int(pstore.x.nbytes) + int(pstore.y.nbytes)
         xs = (
-            jnp.arange(t0, t0 + r, dtype=jnp.int32),
-            jnp.asarray(phis),
-            jnp.asarray(host_slots),
+            put(np.arange(t0, t0 + r, dtype=np.int32)),
+            put(np.asarray(phis)),
+            put(np.asarray(host_slots)),
             bi_xs,
             sw_xs,
             sv_xs,
-            jnp.asarray(prox),
+            put(np.asarray(prox)),
             mask_xs,
-            freeze_xs,
+            jax.tree_util.tree_map(put, freeze_xs),
         )
         return _ChunkPlan(t0=t0, r=r, cand=cand, cand_dev=cand_dev, page=page,
                           cfg_grid=cfg_grid, xs=xs,
@@ -801,65 +811,80 @@ def run_scan_driver(
     last_exploit = False
     t_final = 0
     t_dispatch = 0
+    # Recompile sentinel: `compiles_chunk` counts XLA compilations observed
+    # across chunk dispatches — with pinned carry layouts and pow2-bucketed
+    # candidate shapes this is exactly 1 per (strategy, mesh, knobs) job, and
+    # any drift is the silent-recompile regression the sentinel exists to
+    # catch.  `compiles_total` additionally includes programs compiled
+    # outside dispatch (none today; a canary for future host-side jits).
+    stats["compiles_chunk"] = 0
+    compile_counter = CompileCounter()
+    compile_counter.__enter__()
     t_start = time.perf_counter()
     flush_mark = t_start
-    while pending or (t_dispatch < max_rounds and not stopped):
-        # fill the pipeline: build chunk inputs (host), place them (async
-        # H2D) and dispatch (async) — never blocking on in-flight chunks
-        while len(pending) < depth and t_dispatch < max_rounds and not stopped:
-            b0 = time.perf_counter()
-            plan = build_chunk(t_dispatch)
-            w, sc, es_flag, last_acc, outs = runner.run_chunk(
-                w, sc, es_flag, last_acc, plan.cand_dev, plan.page, plan.xs,
-                plan.use_prox, plan.has_mask,
-            )
-            stats["host_build_s"] += time.perf_counter() - b0
-            stats["schedule_bytes_host"] += plan.sched_bytes
-            stats["page_bytes_h2d"] += plan.page_bytes
-            if pending:
-                stats["speculative_chunks"] += 1
-            pending.append((plan, outs))
-            t_dispatch += plan.r
+    try:
+        while pending or (t_dispatch < max_rounds and not stopped):
+            # fill the pipeline: build chunk inputs (host), place them (async
+            # H2D) and dispatch (async) — never blocking on in-flight chunks
+            while len(pending) < depth and t_dispatch < max_rounds and not stopped:
+                b0 = time.perf_counter()
+                plan = build_chunk(t_dispatch)
+                c0 = compile_counter.compiles
+                w, sc, es_flag, last_acc, outs = runner.run_chunk(
+                    w, sc, es_flag, last_acc, plan.cand_dev, plan.page, plan.xs,
+                    plan.use_prox, plan.has_mask,
+                )
+                stats["compiles_chunk"] += compile_counter.compiles - c0
+                stats["host_build_s"] += time.perf_counter() - b0
+                stats["schedule_bytes_host"] += plan.sched_bytes
+                stats["page_bytes_h2d"] += plan.page_bytes
+                if pending:
+                    stats["speculative_chunks"] += 1
+                pending.append((plan, outs))
+                t_dispatch += plan.r
 
-        plan, outs = pending.popleft()
-        w0 = time.perf_counter()
-        outs = jax.device_get(outs)            # the chunk's ONE host sync
-        stats["device_wait_s"] += time.perf_counter() - w0
-        # sampled when the pipeline is fullest (this chunk's buffers are
-        # still live, the next chunk's page/schedules already transferred) —
-        # the flat-in-M acceptance probe for the paged store
-        stats["peak_live_bytes"] = max(stats["peak_live_bytes"], _live_device_bytes())
+            plan, outs = pending.popleft()
+            w0 = time.perf_counter()
+            outs = jax.device_get(outs)            # the chunk's ONE host sync
+            stats["device_wait_s"] += time.perf_counter() - w0
+            # sampled when the pipeline is fullest (this chunk's buffers are
+            # still live, the next chunk's page/schedules already transferred) —
+            # the flat-in-M acceptance probe for the paged store
+            stats["peak_live_bytes"] = max(stats["peak_live_bytes"], _live_device_bytes())
 
-        f0 = time.perf_counter()
-        flushed, chunk_stopped = flush_chunk(plan, outs)
-        if flushed:
-            any_flushed = True
-            last_exploit = bool(outs["exploited"][flushed - 1])
-            t_final = plan.t0 + flushed
-        # chunk wall: everything since the previous flush completed
-        # (schedule build + compiled chunk + flush bookkeeping — under
-        # pipelining the phases overlap, so consecutive flush-to-flush
-        # deltas are the partition of total wall time), amortized over the
-        # flushed rounds
-        now = time.perf_counter()
-        wall, flush_mark = now - flush_mark, now
-        for rec in records[-flushed:] if flushed else []:
-            rec.wall_s = wall / flushed
-        if chunk_stopped:
-            stopped = True
-            # speculative chunks past the stop ran fully masked: their carry
-            # outputs are bitwise the stop round's state, their rounds all
-            # invalid — drop the outputs unread
-            stats["cancelled_chunks"] += len(pending)
-            pending.clear()
-        stats["chunks"] += 1
-        stats["host_flush_s"] += time.perf_counter() - f0
-        # the carry write-back waits until the carry is settled: with no
-        # chunk in flight, ``sc`` is exactly the flushed state (serial mode:
-        # every chunk; pipelined: the final chunk or the post-stop freeze)
-        if not pending and any_flushed and program.finalize is not None:
-            program.finalize(sc, t_final, last_exploit)
+            f0 = time.perf_counter()
+            flushed, chunk_stopped = flush_chunk(plan, outs)
+            if flushed:
+                any_flushed = True
+                last_exploit = bool(outs["exploited"][flushed - 1])
+                t_final = plan.t0 + flushed
+            # chunk wall: everything since the previous flush completed
+            # (schedule build + compiled chunk + flush bookkeeping — under
+            # pipelining the phases overlap, so consecutive flush-to-flush
+            # deltas are the partition of total wall time), amortized over the
+            # flushed rounds
+            now = time.perf_counter()
+            wall, flush_mark = now - flush_mark, now
+            for rec in records[-flushed:] if flushed else []:
+                rec.wall_s = wall / flushed
+            if chunk_stopped:
+                stopped = True
+                # speculative chunks past the stop ran fully masked: their carry
+                # outputs are bitwise the stop round's state, their rounds all
+                # invalid — drop the outputs unread
+                stats["cancelled_chunks"] += len(pending)
+                pending.clear()
+            stats["chunks"] += 1
+            stats["host_flush_s"] += time.perf_counter() - f0
+            # the carry write-back waits until the carry is settled: with no
+            # chunk in flight, ``sc`` is exactly the flushed state (serial mode:
+            # every chunk; pipelined: the final chunk or the post-stop freeze)
+            if not pending and any_flushed and program.finalize is not None:
+                program.finalize(sc, t_final, last_exploit)
 
+    finally:
+        compile_counter.__exit__()
+        stats["compiles_total"] = compile_counter.compiles
     stats["total_s"] = time.perf_counter() - t_start
     return finalize_result(
         strategy=strategy,

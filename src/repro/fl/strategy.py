@@ -202,6 +202,15 @@ class Strategy:
     ``supports_scan`` — the paged store exists only under ``driver="scan"``.
     """
 
+    fallback_reason: Optional[str] = None
+    """Machine-readable one-liner for strategies that opt OUT of the
+    compiled path (``supports_scan = False``): *why* this strategy needs
+    the host loop.  Required by the FLC006 conformance lint whenever
+    ``supports_scan`` is explicitly declared False, and rendered by both
+    the generated ``docs/support-matrix.md`` and
+    ``python -m repro.analysis --conformance-table`` so the explanation
+    can never drift from the declaration it justifies."""
+
     def propose_candidates(self, ts) -> Optional[np.ndarray]:
         """Candidate superset for a chunk's device-side selection.
 

@@ -68,13 +68,27 @@ def _transform_cell(cls: Type[Strategy]) -> str:
 
 
 def render_support_matrix() -> str:
-    """The markdown table embedded in docs/support-matrix.md."""
+    """The markdown table embedded in docs/support-matrix.md (plus the
+    machine-readable fallback reasons of any opted-out strategies)."""
     rows = [_HEADER]
     for cls in STRATEGY_CLASSES:
         rows.append(
             f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | "
             f"{_sharded_scan_cell(cls)} | {_paged_cell(cls)} | "
             f"{_transform_cell(cls)} |"
+        )
+    fallbacks = [
+        cls for cls in STRATEGY_CLASSES
+        if not cls.supports_scan and cls.fallback_reason
+    ]
+    if fallbacks:
+        rows.append("")
+        rows.append(
+            "Loop-only strategies (`fallback_reason`, also surfaced by "
+            "`python -m repro.analysis --conformance-table`):"
+        )
+        rows.extend(
+            f"- `{cls.name}`: {cls.fallback_reason}" for cls in fallbacks
         )
     return "\n".join(rows)
 

@@ -154,7 +154,7 @@ def run_one(
         **model_kwargs,
     )
     result["overrides"] = {k: v for k, v in overrides.items()}
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     pspecs = param_specs(params_shapes, mesh, fsdp=overrides.get("fsdp", True),
@@ -204,9 +204,9 @@ def run_one(
             jitted = jax.jit(step, in_shardings=in_shard, donate_argnums=(2,))
             lowered = jitted.lower(*args)
 
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     result.update(_analyses(lowered, compiled))
     hlo = compiled.as_text()
@@ -290,10 +290,10 @@ def run_flrce_step(*, multi_pod: bool = False, dim: int = 7_000_000_000, p: int 
             ),
             out_shardings=(NamedSharding(mesh, P(axes)), None, None),
         )
-        t0 = time.time()
+        t0 = time.perf_counter()
         lowered = jitted.lower(w, updates, weights)
         compiled = lowered.compile()
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
     result: Dict[str, Any] = {"arch": "flrce-server-step", "shape": f"P{p}_D{dim}",
                               "mesh": mesh_name, "chips": chips}
     result.update(_analyses(lowered, compiled))

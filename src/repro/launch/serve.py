@@ -48,9 +48,9 @@ def main() -> None:
     prompt = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
-    t0 = time.time()
+    t0 = time.perf_counter()
     seq = generate(model, params, prompt, args.gen, args.prompt_len + args.gen)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     total_new = args.batch * args.gen
     print(f"[serve] {cfg.name}: generated {total_new} tokens in {dt:.2f}s "
           f"({total_new / dt:.1f} tok/s, batch={args.batch})")

@@ -85,7 +85,7 @@ def run_pretrain_mode(args) -> dict:
 
     history = []
     for t in range(args.rounds):
-        t0 = time.time()
+        t0 = time.perf_counter()
         ids = server.select()
         w_before, unflatten = flatten_pytree(params)
         updates, losses = [], []
@@ -109,7 +109,7 @@ def run_pretrain_mode(args) -> dict:
                "mean_loss": float(np.mean(losses)),
                "conflicts": server.state.last_conflicts,
                "exploit": server.last_round_was_exploit,
-               "stopped": bool(stop), "wall_s": round(time.time() - t0, 2)}
+               "stopped": bool(stop), "wall_s": round(time.perf_counter() - t0, 2)}
         history.append(rec)
         print(f"[pretrain] {json.dumps(rec)}")
         if stop:
