@@ -108,7 +108,7 @@ def _fleet_dataset(m: int, n_per: int, feature_dim: int = 16, num_classes: int =
 def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
         epochs: int = EPOCHS, driver: str = "loop", chunk: int = 8,
         warmup: int = 1, strategy_fn=None, pipeline=None,
-        client_store: str = "resident"):
+        client_store: str = "resident", async_rounds=None):
     try:
         from benchmarks.common import per_round_wall
     except ImportError:
@@ -131,10 +131,17 @@ def run(engine: str, ds, model, rounds: int, *, clients: int = CLIENTS,
             max_rounds=rounds, learning_rate=0.05, batch_size=BATCH, seed=0,
             engine=engine, driver=driver, scan_chunk_rounds=chunk,
             pipeline=pipeline, client_store=client_store,
+            async_rounds=async_rounds,
         )
     wall = time.perf_counter() - t0
     # every leg reports how many XLA programs it compiled (the recompile
     # sentinel); scan legs additionally carry driver_stats["compiles_chunk"]
+    # schema pin: every leg's stats must match the published contract
+    # (validated before the benchmark stamps its own bench_compiles extra —
+    # the loop engines' `{}` stays empty and valid)
+    from repro.fl.stats_schema import validate_driver_stats
+
+    validate_driver_stats(res.driver_stats)
     res.driver_stats["bench_compiles"] = cc.compiles
     # exclude the compile-heavy warmup rounds (unless nothing would remain)
     per_round = per_round_wall(res, warmup)
@@ -197,6 +204,8 @@ def write_report(path: str, per_round: dict, meta: dict,
                  compiles: dict = None) -> None:
     import jax
 
+    from repro.fl.stats_schema import validate_bench_report
+
     compiles = compiles or {}
     report = {
         "benchmark": "engine",
@@ -212,6 +221,9 @@ def write_report(path: str, per_round: dict, meta: dict,
             for eng, s in per_round.items()
         },
     }
+    # schema pin: a malformed report (renamed key, missing leg timing, bool
+    # where a count belongs) fails HERE, not in whatever reads the JSON later
+    validate_bench_report(report)
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
         f.write("\n")
@@ -325,9 +337,32 @@ def main(argv=None) -> int:
         assert res_bat_c.ledger.total_bytes == res_scan_c.ledger.total_bytes, (
             res_bat_c.ledger.total_bytes, res_scan_c.ledger.total_bytes)
         speedup_c = per_round["batched_fedcom"] / per_round["scan_fedcom"]
+        # staleness-aware async rounds: the same compiled chunks with the
+        # arrival ring buffer riding in the donated carry.  The leg pins the
+        # two invariants benchmarking can check cheaply: the async chunk
+        # still compiles exactly once (the ring buffer must not break the
+        # pinned carry layout), and resource charges stay departure-based
+        # (energy/bytes equal the synchronous scan leg's at any staleness).
+        from repro.fl import AsyncConfig
+
+        res_async, _, per_round["async"] = run(
+            "batched", ds, model, scan_rounds, clients=4, epochs=1,
+            driver="scan", chunk=chunk, warmup=chunk, pipeline=True,
+            async_rounds=AsyncConfig(max_staleness=2))
+        assert res_async.rounds_run == scan_rounds, res_async.rounds_run
+        _assert_one_chunk_compile(res_async, "async")
+        st_async = res_async.driver_stats
+        departures = sum(len(r.selected) for r in res_async.records)
+        assert st_async["async_arrivals"] + st_async["async_pending_at_exit"] \
+            == departures, (st_async, departures)
+        assert res_async.ledger.total_bytes == res_scan.ledger.total_bytes
+        assert res_async.ledger.energy_j == res_scan.ledger.energy_j
+        host_split["async"] = _host_split(res_async)
+
         compiles.update({
             "batched": _leg_compiles(res_bat),
             "scan": _leg_compiles(res_scan),
+            "async": _leg_compiles(res_async),
             "pipelined": _leg_compiles(res_pip),
             "sharded": _leg_compiles(res_shl),
             "sharded_scan": _leg_compiles(res_shs),
@@ -390,6 +425,7 @@ def main(argv=None) -> int:
                       "sharded_scan_speedup_vs_sharded": speedup_sh,
                       "pipeline_speedup_vs_scan": speedup_pip,
                       "sharded_pipeline_speedup_vs_sharded_scan": speedup_shp,
+                      "async_max_staleness": 2,
                       "paged_fleet": paged_fleet,
                       "host_split": host_split},
                      compiles=compiles)

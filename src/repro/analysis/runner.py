@@ -15,6 +15,7 @@ from repro.analysis.donation import DonationPass
 from repro.analysis.host_sync import HostSyncPass
 from repro.analysis.rng import RngPass
 from repro.analysis.sharding_pin import ShardingPinPass
+from repro.analysis.staleness import StalenessPass
 from repro.analysis.wallclock import WallClockPass
 
 #: Registration order == rule-ID order == docs order.
@@ -25,6 +26,7 @@ ALL_PASSES: Tuple[Type[LintPass], ...] = (
     RngPass,
     WallClockPass,
     ConformancePass,
+    StalenessPass,
 )
 
 RULES: Dict[str, RuleInfo] = {cls.rule.rule_id: cls.rule for cls in ALL_PASSES}

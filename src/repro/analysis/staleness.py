@@ -1,0 +1,102 @@
+"""FLC007 staleness-arithmetic.
+
+The async arrival ring buffer tracks two round indices per pending update:
+the round its cohort **departed** (trained and uploaded) and the round it
+**lands** (gets aggregated).  Every staleness quantity is the *same*
+subtraction — ``t_land - t_depart`` — but the sign convention and the
+clip-to-``max_staleness`` are exactly the off-by-one class that async FL
+bugs hide in.  ``repro.fl.async_rounds.staleness_of(t_depart, t_land)`` is
+the ONE sanctioned site for that arithmetic; everything else (the scan
+driver, strategy ingest hooks, benchmarks) must call it rather than
+re-deriving ``-`` on departure/landing/arrival indices inline.
+
+The pass flags any binary or augmented subtraction where an operand's
+identifier mentions a departure/landing/arrival index, unless the code sits
+inside a function literally named ``staleness_of``.  A justified exception
+(e.g. plotting code subtracting an arrival timestamp) is silenced with
+``# flcheck: disable=FLC007``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.base import (
+    Finding,
+    LintPass,
+    RuleInfo,
+    SourceFile,
+)
+
+#: Identifier fragments that mark a round index as departure/landing/arrival
+#: bookkeeping ("arriv" covers arrive/arrived/arrival/arrivals).
+_STALE_TOKENS = ("depart", "land", "arriv")
+
+
+def _operand_tokens(node: ast.AST) -> Iterable[str]:
+    """Identifier-ish strings reachable in one subtraction operand: plain
+    names, attribute accesses and string subscript keys (``abuf["land"]``)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+        elif isinstance(sub, ast.Subscript):
+            key = sub.slice
+            if isinstance(key, ast.Constant) and isinstance(key.value, str):
+                yield key.value
+
+
+def _mentions_staleness(node: ast.AST) -> bool:
+    return any(
+        tok in ident.lower()
+        for ident in _operand_tokens(node)
+        for tok in _STALE_TOKENS
+    )
+
+
+class StalenessPass(LintPass):
+    rule = RuleInfo(
+        rule_id="FLC007",
+        name="staleness-arithmetic",
+        invariant=(
+            "Round-index subtraction on arrival-buffer fields (depart/land/"
+            "arrival) happens only inside `staleness_of(t_depart, t_land)`."
+        ),
+        motivation=(
+            "PR 8's async rounds are bitwise-sync at max_staleness=0 only "
+            "because τ has a single sign convention; an inline `t - depart` "
+            "with flipped operands passes tests at τ=0 and skews Eq. 4 after."
+        ),
+    )
+    fixit = (
+        "call `repro.fl.async_rounds.staleness_of(t_depart, t_land)` instead "
+        "of subtracting arrival-buffer round indices inline"
+    )
+
+    def _exempt(self, sf: SourceFile, node: ast.AST) -> bool:
+        return any(
+            isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and fn.name == "staleness_of"
+            for fn in sf.enclosing_functions(node)
+        )
+
+    def check(self, sf: SourceFile) -> List[Finding]:
+        out: List[Optional[Finding]] = []
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Sub):
+                operands: List[ast.AST] = [node.left, node.right]
+            elif isinstance(node, ast.AugAssign) and isinstance(node.op, ast.Sub):
+                operands = [node.target, node.value]
+            else:
+                continue
+            if not any(_mentions_staleness(op) for op in operands):
+                continue
+            if self._exempt(sf, node):
+                continue
+            out.append(self.finding(
+                sf, node,
+                "ad-hoc subtraction on a departure/landing round index — "
+                "the τ convention lives in `staleness_of`, not here",
+            ))
+        return [f for f in out if f is not None]

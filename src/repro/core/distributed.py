@@ -96,6 +96,22 @@ def conflict_degree_from_gram(gram: jax.Array) -> jax.Array:
     return conflict_pairs_from_gram(gram) / gram.shape[0]
 
 
+def masked_conflict_pairs_from_gram(gram: jax.Array, valid: jax.Array) -> jax.Array:
+    """:func:`conflict_pairs_from_gram` restricted to rows where ``valid``.
+
+    The mesh-bound async server counts Alg. 3 conflicts over its fixed-shape
+    (K, D) arrival buffer; only pairs whose BOTH rows landed this round are
+    counted.  With ``valid`` all-True the pair mask multiplies by exactly
+    1.0, so the count is bitwise :func:`conflict_pairs_from_gram` — the τ=0
+    equivalence the async harness pins.
+    """
+    k = gram.shape[0]
+    cos = cossim_from_gram(gram)
+    vm = valid.astype(cos.dtype)
+    mask = vm[:, None] * vm[None, :] * (1.0 - jnp.eye(k, dtype=cos.dtype))
+    return jnp.sum((cos < 0.0).astype(jnp.float32) * mask)
+
+
 def async_relationship_from_dots(
     uu: jax.Array,       # ⟨u_p, u_q⟩            (fresh p, stored q)
     qq: jax.Array,       # ⟨u_q, u_q⟩

@@ -42,6 +42,26 @@ def conflict_pairs(updates: jax.Array) -> jax.Array:
     return jnp.sum(neg)
 
 
+def masked_conflict_pairs(updates: jax.Array, valid: jax.Array) -> jax.Array:
+    """:func:`conflict_pairs` restricted to the rows where ``valid`` is True.
+
+    The async scan driver's arrival buffer is a fixed-shape (K, D) stack in
+    which only the rows that *landed* this round participate in Alg. 3; a
+    pair is counted iff both of its rows are valid.  With ``valid`` all-True
+    the pair mask multiplies by exactly 1.0 and the count is bitwise
+    :func:`conflict_pairs` — the τ=0 equivalence the async harness pins.
+    """
+    u = updates.astype(jnp.float32)
+    norms = jnp.maximum(jnp.linalg.norm(u, axis=1, keepdims=True), _EPS)
+    un = u / norms
+    gram = un @ un.T
+    k = updates.shape[0]
+    vm = valid.astype(jnp.float32)
+    mask = vm[:, None] * vm[None, :] * (1.0 - jnp.eye(k, dtype=gram.dtype))
+    neg = (gram < 0.0).astype(jnp.float32) * mask
+    return jnp.sum(neg)
+
+
 def conflict_degree(updates: jax.Array) -> jax.Array:
     """Average number of conflicting peers per client for (P, D) updates.
 

@@ -293,9 +293,17 @@ def rows_from_relationship_dots(
         ru=ru, pp=pp[:, None],
     )
 
-    fresh = last_rounds >= (t - 1)
     seen = last_rounds >= 0
-    rows = jnp.where(fresh[None, :], sync, asyncr)
+    if jnp.ndim(t) == 0:
+        fresh = last_rounds >= (t - 1)
+        rows = jnp.where(fresh[None, :], sync, asyncr)
+    else:
+        # Async arrivals: each fresh row k carries its own departure round
+        # t[k] — freshness of a stored peer update is judged against the
+        # round row k's update LEFT, so Eq. 5 vs Eq. 6 selection matches the
+        # synchronous semantics of that departure round.
+        fresh = last_rounds[None, :] >= (jnp.asarray(t)[:, None] - 1)
+        rows = jnp.where(fresh, sync, asyncr)
     rows = jnp.where(seen[None, :], rows, omega_rows)
     # Ω[k, k] keeps its previous value (self-relationship excluded, Eq. 7)
     rows = rows.at[arange_k, ids].set(omega_rows[arange_k, ids])

@@ -460,6 +460,137 @@ class FLrceServer:
             "conflicts": avg.astype(jnp.float32),
         }, dec_stop
 
+    # -- async (out-of-order arrival) variants -------------------------------
+    # The async scan driver holds departed updates in a fixed-shape arrival
+    # buffer and lands a subset each round.  These are :meth:`scan_ingest` /
+    # :meth:`scan_check_early_stop` re-derived for that regime; with every
+    # row arriving in its departure round (max_staleness=0) both are bitwise
+    # their synchronous counterparts — the equivalence the async harness pins.
+
+    def scan_ingest_async(
+        self,
+        carry: Dict[str, jax.Array],
+        w_t: jax.Array,             # (D,) global model at the LANDING round
+        ids: jax.Array,             # (K,) arrival-buffer client ids
+        t_depart: jax.Array,        # (K,) int32 departure round per row
+        client_updates: jax.Array,  # (K, D) buffered updates
+        anchor_rows: jax.Array,     # (K, D) global model at each row's departure
+        arrived: jax.Array,         # (K,) bool — rows landing this round
+    ) -> Dict[str, jax.Array]:
+        """:meth:`scan_ingest` over an arrival buffer with out-of-order rows.
+
+        V/A/R rows update **against the round the update left**: the update
+        map stores the buffered update with its departure-round anchor and
+        ``last_round`` records ``t_depart``, so the Eq. 5/6 freshness split in
+        ``rows_from_relationship_dots`` (vector-``t`` branch) and later Eq. 6
+        orthdists stay well-defined for stale arrivals.  When the same client
+        lands twice in one round (a stale copy catching up alongside a fresh
+        one) the freshest departure wins and the stale row is dropped from
+        every scatter.  Non-arrived rows scatter to an out-of-range target
+        and drop out entirely.
+
+        With ``arrived`` all-True, distinct ids and ``t_depart == t`` (the
+        max_staleness=0 chunk) every scatter target equals ``ids`` and every
+        operand matches :meth:`scan_ingest`'s bitwise.
+        """
+        if self.sketched:
+            raise ValueError(
+                "async ingest requires exact V/A maps (va_rows=None); the "
+                "sketched server's LRU row assignment is departure-ordered"
+            )
+        m = carry["last_round"].shape[0]
+        w32 = w_t.astype(jnp.float32)
+        u32 = client_updates.astype(jnp.float32)
+        a32 = anchor_rows.astype(jnp.float32)
+        ids = ids.astype(jnp.int32)
+        dep32 = t_depart.astype(jnp.int32)
+        # freshest-departure-wins dedup: row i loses iff some arrived row j
+        # carries the same client with a strictly later departure
+        same = ids[:, None] == ids[None, :]
+        newer = jnp.logical_and(
+            jnp.logical_and(same, arrived[None, :]),
+            dep32[None, :] > dep32[:, None],
+        )
+        keep = jnp.logical_and(arrived, jnp.logical_not(jnp.any(newer, axis=1)))
+        # losers and non-arrivals scatter out of range (index m drops; -1
+        # would WRAP under jnp indexing)
+        tgt = jnp.where(keep, ids, m)
+        updates = carry["updates"].at[tgt].set(u32, mode="drop")
+        anchors = carry["anchors"].at[tgt].set(a32, mode="drop")
+        last_round = carry["last_round"].at[tgt].set(dep32, mode="drop")
+        if self.mesh is not None:
+            rows = relationship.sharded_relationship_block(
+                ids, u32, w32, updates, anchors, last_round, dep32,
+                carry["omega"][ids], mesh=self.mesh, axes=self.mesh_axes,
+            )
+        else:
+            rows = relationship.relationship_block(
+                ids, u32, w32, updates, anchors, last_round, dep32,
+                carry["omega"][ids],
+            )
+        omega = carry["omega"].at[tgt].set(rows, mode="drop")
+        heuristic = heuristics.update_heuristic_rows(carry["heuristic"], omega, tgt)
+        return {
+            **carry,
+            "omega": omega,
+            "heuristic": heuristic,
+            "updates": updates,
+            "anchors": anchors,
+            "last_round": last_round,
+        }
+
+    def scan_check_early_stop_async(
+        self,
+        carry: Dict[str, jax.Array],
+        arrived_updates: jax.Array,  # (K, D) arrival buffer
+        arrived: jax.Array,          # (K,) bool — rows landing this round
+        t: jax.Array,
+        exploited: jax.Array,
+    ) -> Tuple[Dict[str, jax.Array], jax.Array]:
+        """Alg. 3 over this round's arrivals (async counterpart of
+        :meth:`scan_check_early_stop`).
+
+        The conflict-pair count runs over the landed rows only (a pair counts
+        iff BOTH rows arrived this round) and is still averaged over the
+        cohort size P and compared against the same host-resolved integer
+        threshold, so a full cohort of τ=0 arrivals reproduces the
+        synchronous decision bitwise.  ``exploited`` is the LANDING round's
+        phase: Alg. 3 only ever fires on exploit rounds, whichever round the
+        arrivals departed in.
+        """
+        p = self.p
+        if self.mesh is not None:
+            from repro.core.distributed import (
+                masked_conflict_pairs_from_gram,
+                sharded_gram,
+            )
+
+            pairs = masked_conflict_pairs_from_gram(
+                sharded_gram(arrived_updates, self.mesh, self.mesh_axes),
+                arrived,
+            )
+        else:
+            pairs = early_stopping.masked_conflict_pairs(arrived_updates, arrived)
+        avg = jnp.where(exploited, pairs / p, 0.0)
+        # smallest integer n with n / p >= psi, resolved in host f64
+        n0 = max(0, int(np.ceil(self.psi * p)))
+        while n0 > 0 and (n0 - 1) / p >= self.psi:
+            n0 -= 1
+        while n0 / p < self.psi:
+            n0 += 1
+        dec_stop = jnp.logical_and(exploited, pairs >= jnp.float32(n0))
+        prev_stopped = carry["es_stopped"]
+        return {
+            **carry,
+            "es_stopped": jnp.logical_or(prev_stopped, dec_stop),
+            "es_stop_round": jnp.where(
+                prev_stopped,
+                carry["es_stop_round"],
+                jnp.where(dec_stop, t.astype(jnp.int32), jnp.int32(-1)),
+            ),
+            "conflicts": avg.astype(jnp.float32),
+        }, dec_stop
+
     def load_scan_carry(
         self, carry: Dict[str, jax.Array], t_next: int, last_exploit: bool
     ) -> None:

@@ -1,5 +1,6 @@
 """Federated-learning substrate: engine, strategies, metrics."""
-from repro.fl.aggregation import aggregate, aggregation_weights
+from repro.fl.aggregation import aggregate, aggregation_weights, staleness_weights
+from repro.fl.async_rounds import AsyncConfig, staleness_of
 from repro.fl.client import ClientTrainer
 from repro.fl.flrce import FLrce
 from repro.fl.metrics import ResourceLedger, communication_efficiency, computation_efficiency
@@ -9,6 +10,9 @@ from repro.fl.strategy import LocalConfig, ScanProgram, Strategy
 __all__ = [
     "aggregate",
     "aggregation_weights",
+    "staleness_weights",
+    "AsyncConfig",
+    "staleness_of",
     "ClientTrainer",
     "FLrce",
     "ResourceLedger",

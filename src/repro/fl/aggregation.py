@@ -19,6 +19,34 @@ def aggregation_weights(sample_counts: Sequence[float]) -> np.ndarray:
     return (n / total).astype(np.float32)
 
 
+def staleness_weights(
+    sample_counts: Sequence[float],
+    staleness: Sequence[int],
+    decay,
+) -> np.ndarray:
+    """Staleness-weighted Eq. 4: ``p_k ∝ n_k · decay(τ_k)``, renormalized.
+
+    The host-side reference for the async scan driver's in-graph weighting
+    (``repro.fl.async_rounds``): each arrived update's sample count is scaled
+    by the staleness discount ``decay(τ_k)`` before the Eq. 4 normalization.
+    With every ``τ_k == 0`` and ``decay(0) == 1.0`` the scaling multiplies by
+    exactly 1.0, so the result is bit-for-bit :func:`aggregation_weights` —
+    the property the async ≡ sync equivalence harness pins
+    (tests/test_properties.py, tests/test_async_rounds.py).
+    """
+    n = np.asarray(sample_counts, dtype=np.float64)
+    taus = np.asarray(staleness)
+    if n.shape != taus.shape:
+        raise ValueError(
+            f"sample_counts {n.shape} and staleness {taus.shape} must align"
+        )
+    scaled = n * np.asarray([float(decay(int(tau))) for tau in taus], np.float64)
+    total = scaled.sum()
+    if total <= 0:
+        return np.full(len(n), 1.0 / max(1, len(n)))
+    return (scaled / total).astype(np.float32)
+
+
 def aggregate(w: PyTree, updates: List[PyTree], weights: np.ndarray) -> PyTree:
     """w_{t+1} = w_t + Σ p_k u_k, leafwise."""
     if len(updates) != len(weights):

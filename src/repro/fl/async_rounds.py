@@ -1,0 +1,193 @@
+"""Staleness-aware asynchronous rounds for the compiled chunk driver.
+
+The IoT regime the paper targets (§1) is dominated by stragglers: selected
+clients train on the current broadcast but their uploads arrive late.  The
+surveys in PAPERS.md (Imteaj et al.; Kaur & Jadhav) name staleness-tolerant
+asynchronous aggregation as the realistic deployment mode, and the pipelined
+scan driver (PR 6) already has the machinery an async round needs —
+speculative dispatch, a carried stop flag and deferred host write-back.
+
+``run_federated(..., async_rounds=AsyncConfig(...))`` turns the scan driver's
+synchronous rounds into *staleness-aware* rounds:
+
+* every selected client still trains at its **departure** round ``t`` on the
+  round-``t`` model, but its update is held back ``τ ∈ [0, max_staleness]``
+  rounds (a per-(round, client) delivery delay from a seeded synthetic trace,
+  or a per-client delay profile);
+* the round-``t + τ`` aggregation applies the staleness-weighted Eq. 4 over
+  whatever **arrived** that round: each update's Eq. 4 weight ``n_k`` is
+  scaled by ``decay(τ)`` and the scaled weights are renormalized
+  (:func:`repro.fl.aggregation.staleness_weights` is the host-side
+  reference);
+* FLrce's relationship ingest and Alg. 3 early stopping are re-derived for
+  out-of-order arrival: V/A/R rows update against the round the update
+  *left* (``FLrceServer.scan_ingest_async``), so the Eq. 6/7 freshness
+  comparison and the conflict-pair count stay well-defined.
+
+**The equivalence spine**: with ``max_staleness=0`` every update lands in the
+round it departed and ``decay(0) == 1.0`` leaves the Eq. 4 weights untouched
+bit-for-bit — the async chunk program reproduces the synchronous pipelined
+driver **bitwise** (records, ledger, written-back strategy state), extending
+the repo's seq ≡ batched ≡ sharded ≡ scan ≡ pipelined ≡ paged chain by one
+link (tests/test_async_rounds.py, via tests/equivalence.py).
+
+Round-index arithmetic on the arrival buffers is the off-by-one class this
+feature invites; :func:`staleness_of` is the single sanctioned place for it
+(flcheck rule FLC007 bans ad-hoc departure/landing subtraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def staleness_of(t_depart, t_land):
+    """Staleness τ of an update that left at ``t_depart`` and lands at ``t_land``.
+
+    The ONE sanctioned site for round-index arithmetic on arrival buffers
+    (flcheck FLC007): every τ in the async path derives from this helper, so
+    the departure-vs-landing convention lives in exactly one place.  Works on
+    scalars and arrays (τ = t_land − t_depart, ≥ 0 for any delivered update).
+    """
+    return t_land - t_depart
+
+
+def default_decay(tau: int) -> float:
+    """Polynomial staleness discount ``1 / (1 + τ)`` (decay(0) == 1.0)."""
+    return 1.0 / (1.0 + tau)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Configuration for ``run_federated(..., async_rounds=...)``.
+
+    * ``max_staleness`` — the largest delivery delay τ (in rounds) the trace
+      may assign.  ``0`` is the synchronous-equivalence mode: every update
+      lands in its departure round and the run is bitwise the pipelined
+      driver's.
+    * ``decay`` — staleness discount ``τ → weight`` applied to each arrived
+      update's Eq. 4 sample count before renormalization.  Must satisfy
+      ``decay(0) == 1.0`` exactly (the bitwise τ=0 equivalence) and be
+      finite and positive on ``[0, max_staleness]``.  ``None`` ⇒
+      :func:`default_decay` (``1 / (1 + τ)``).
+    * ``trace`` — delivery-delay source.  ``None`` ⇒ a seeded synthetic
+      trace: τ is a deterministic hash of ``(seed, round, client)``
+      (:func:`synthetic_delays`), uniform over ``[0, max_staleness]``.
+      Otherwise a length-M integer array of per-client delays (a
+      compute/bandwidth profile); values are clipped to
+      ``[0, max_staleness]``.
+    """
+
+    max_staleness: int = 0
+    decay: Optional[Callable[[int], float]] = None
+    trace: Optional[Any] = None
+
+    def validate(self, num_clients: Optional[int] = None) -> None:
+        if not isinstance(self.max_staleness, (int, np.integer)) \
+                or isinstance(self.max_staleness, bool):
+            raise ValueError(
+                f"AsyncConfig.max_staleness must be an int, got "
+                f"{self.max_staleness!r}"
+            )
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"AsyncConfig.max_staleness must be >= 0, got "
+                f"{self.max_staleness}"
+            )
+        self.decay_table()   # validates decay(0) == 1.0 and positivity
+        if self.trace is not None:
+            tr = np.asarray(self.trace)
+            if tr.ndim != 1:
+                raise ValueError(
+                    f"AsyncConfig.trace must be a 1-D per-client delay "
+                    f"array, got shape {tr.shape}"
+                )
+            if num_clients is not None and len(tr) != num_clients:
+                raise ValueError(
+                    f"AsyncConfig.trace has {len(tr)} entries but the "
+                    f"dataset has {num_clients} clients"
+                )
+
+    def decay_table(self) -> np.ndarray:
+        """``decay`` evaluated on every reachable τ — the (S+1,) f32 lookup
+        table the compiled chunk gathers from (a host callable cannot be
+        traced per-arrival)."""
+        fn = self.decay if self.decay is not None else default_decay
+        table = np.asarray([float(fn(tau)) for tau in range(self.max_staleness + 1)],
+                           np.float32)
+        if table[0] != 1.0:
+            raise ValueError(
+                f"AsyncConfig.decay(0) must be exactly 1.0 so that "
+                f"max_staleness=0 reproduces the synchronous driver bitwise; "
+                f"got {table[0]!r}"
+            )
+        if not np.all(np.isfinite(table)) or np.any(table <= 0.0):
+            raise ValueError(
+                "AsyncConfig.decay must be finite and > 0 on "
+                f"[0, {self.max_staleness}]; got table {table.tolist()}"
+            )
+        return table
+
+
+def synthetic_delays(seed: int, t, ids, max_staleness: int):
+    """Deterministic per-(round, client) delivery delay in [0, max_staleness].
+
+    A pure integer hash of ``(seed, t, cid)`` — the async analogue of the
+    ``client_batch_rng`` fold-in discipline: replayable, placement-
+    independent, and traceable inside the scan body (no PRNG key threading).
+    With ``max_staleness=0`` it is identically zero.
+    """
+    x = jnp.asarray(ids).astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    x = x + jnp.asarray(t).astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+    x = x + jnp.uint32(np.uint32(seed & 0xFFFFFFFF))
+    x = (x ^ (x >> 15)) * jnp.uint32(0x2C1B3C6D)
+    x = (x ^ (x >> 12)) * jnp.uint32(0x297A2D39)
+    x = x ^ (x >> 15)
+    return (x % jnp.uint32(max_staleness + 1)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncPlan:
+    """The driver-resolved form of an :class:`AsyncConfig`.
+
+    ``depth`` (= max_staleness + 1) sizes the pending-update ring buffer —
+    slot ``t mod depth`` is always free at round ``t`` because its previous
+    occupant departed ``depth`` rounds ago and landed at latest at ``t - 1``.
+    """
+
+    max_staleness: int
+    decay_table: Any            # (S+1,) f32, device-resident
+    trace: Optional[Any]        # (M,) int32 device per-client delays, or None
+    seed: int
+
+    @property
+    def depth(self) -> int:
+        return self.max_staleness + 1
+
+    def delays(self, t, ids):
+        """Per-update delivery delay τ for the cohort departing at round ``t``
+        (traced; ``ids`` are global client ids)."""
+        if self.trace is not None:
+            return jnp.clip(self.trace[ids], 0, self.max_staleness)
+        return synthetic_delays(self.seed, t, ids, self.max_staleness)
+
+
+def resolve_async_plan(
+    cfg: AsyncConfig, *, num_clients: int, seed: int, put
+) -> AsyncPlan:
+    """Validate an :class:`AsyncConfig` and place its lookup tables on device
+    (``put`` is the driver's replication-pinning ``device_put``)."""
+    cfg.validate(num_clients)
+    trace = None
+    if cfg.trace is not None:
+        trace = put(np.clip(np.asarray(cfg.trace, np.int64), 0,
+                            cfg.max_staleness).astype(np.int32))
+    return AsyncPlan(
+        max_staleness=int(cfg.max_staleness),
+        decay_table=put(cfg.decay_table()),
+        trace=trace,
+        seed=int(seed),
+    )

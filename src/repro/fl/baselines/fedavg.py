@@ -10,3 +10,6 @@ class FedAvg(Strategy):
     # metadata-only configs, no transform, no carry state ⇒ the compiled
     # chunk also runs mesh-sharded
     supports_sharded_scan = True
+    # no per-round bookkeeping: delayed Eq. 4 application is the only change
+    # under staleness, so async rounds need no strategy-side re-derivation
+    supports_async = True

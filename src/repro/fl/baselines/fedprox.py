@@ -15,6 +15,9 @@ class Fedprox(Strategy):
     supports_scan = True
     # the µ vector is replicated metadata — the mesh chunk compiles too
     supports_sharded_scan = True
+    # stateless per-round (the prox term is local-only), so delayed Eq. 4
+    # application under staleness needs no strategy-side re-derivation
+    supports_async = True
 
     def __init__(self, *args, mu: float = 0.01, epoch_fraction: float = 0.4, **kwargs):
         super().__init__(*args, **kwargs)

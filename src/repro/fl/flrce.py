@@ -23,6 +23,11 @@ class FLrce(Strategy):
     # ... and every O(D) carry piece (V/A maps, ingest dots, ES gram) has a
     # mesh-sharded form, so the compiled chunk also runs on a mesh
     supports_sharded_scan = True
+    # ingest + ES are re-derived for out-of-order arrival (scan_ingest_async /
+    # scan_check_early_stop_async), so staleness-aware rounds compile too —
+    # except under sketched V/A maps, where scan_program() withholds the
+    # async hook (LRU row assignment is departure-ordered)
+    supports_async = True
 
     def __init__(
         self,
@@ -144,6 +149,20 @@ class FLrce(Strategy):
             carry, stop = server.scan_check_early_stop(carry, u32, t, exploited)
             return carry, jnp.logical_and(stop, use_es)
 
+        def post_round_async(
+            carry, t, w_before, ids, t_depart, update_matrix, anchor_rows,
+            arrived, exploited,
+        ):
+            u32 = update_matrix.astype(jnp.float32)
+            carry = server.scan_ingest_async(
+                carry, w_before.astype(jnp.float32), ids, t_depart, u32,
+                anchor_rows, arrived,
+            )
+            carry, stop = server.scan_check_early_stop_async(
+                carry, u32, arrived, t, exploited
+            )
+            return carry, jnp.logical_and(stop, use_es)
+
         def explore_phis(ts):
             return np.asarray(
                 [explore_probability(int(t), server.decay) for t in ts], np.float32
@@ -158,4 +177,8 @@ class FLrce(Strategy):
             post_round=post_round,
             explore_phis=explore_phis,
             finalize=finalize,
+            # sketched V/A maps have no async ingest (LRU rows are
+            # departure-ordered); withholding the hook makes the driver's
+            # async validation reject the combination loudly
+            post_round_async=None if server.sketched else post_round_async,
         )

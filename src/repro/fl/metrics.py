@@ -33,6 +33,11 @@ class ResourceLedger:
     bytes_up: float = 0.0
     bytes_down: float = 0.0
     rounds: int = 0
+    # async rounds: arrival counts keyed by staleness τ.  Charges stay
+    # DEPARTURE-based (a client trains and uploads the round it is selected,
+    # whenever its update lands), so energy/bytes are identical to the
+    # synchronous run's; this records the landing side of the story.
+    arrivals_by_staleness: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def joules_per_flop(self) -> float:
@@ -49,6 +54,14 @@ class ResourceLedger:
 
     def end_round(self) -> None:
         self.rounds += 1
+
+    def record_arrivals(self, tau_hist) -> None:
+        """Fold one round's arrival histogram (index = staleness τ) in."""
+        for tau, count in enumerate(tau_hist):
+            if int(count):
+                self.arrivals_by_staleness[int(tau)] = (
+                    self.arrivals_by_staleness.get(int(tau), 0) + int(count)
+                )
 
     @property
     def total_bytes(self) -> float:

@@ -239,6 +239,7 @@ def run_federated(
     scan_chunk_rounds: int = 8,
     pipeline: Optional[bool] = None,
     client_store: str = "resident",
+    async_rounds: Optional["AsyncConfig"] = None,
 ) -> FLResult:
     if engine not in ENGINES:
         raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
@@ -260,6 +261,31 @@ def run_federated(
             "client_store='paged' is the scan driver's host-paged store; it "
             f"has no meaning for driver={driver!r} (pass driver='scan')"
         )
+    if async_rounds is not None:
+        from repro.fl.async_rounds import AsyncConfig
+
+        if not isinstance(async_rounds, AsyncConfig):
+            raise ValueError(
+                f"async_rounds must be an AsyncConfig, got "
+                f"{type(async_rounds).__name__}"
+            )
+        async_rounds.validate(len(dataset.client_indices))
+        if driver != "scan":
+            raise ValueError(
+                "async_rounds runs staleness-aware rounds on the compiled "
+                f"chunk driver; it has no meaning for driver={driver!r} "
+                "(pass driver='scan')"
+            )
+        if not getattr(strategy, "supports_async", False):
+            raise ValueError(
+                f"{strategy.name} does not support async_rounds "
+                "(supports_async is False); see docs/support-matrix.md"
+            )
+        if client_store != "resident":
+            raise ValueError(
+                "async_rounds requires client_store='resident': a pending "
+                "cohort's page would be gone by its landing chunk"
+            )
     if driver == "scan":
         if engine == "sequential":
             raise ValueError(
@@ -288,6 +314,15 @@ def run_federated(
                 # build/H2D/dispatch with the current chunk's execution
                 pipeline=True if pipeline is None else pipeline,
                 paged=client_store == "paged",
+                async_rounds=async_rounds,
+            )
+        if async_rounds is not None:
+            # the loop fallback has no arrival buffer — silently running it
+            # synchronously would fabricate a staleness experiment
+            raise ValueError(
+                f"async_rounds requires the compiled scan path, but "
+                f"{strategy.name} falls back to the {engine} loop driver "
+                "(supports_scan/supports_sharded_scan)"
             )
         if client_store == "paged":
             # the loop drivers rebuild per-round cohort plans and never touch

@@ -61,6 +61,19 @@ exit) but their carry writes are masked out, so the final state is the stop
 round's — the wasted rounds are bounded by ``chunk_rounds`` plus, under
 pipelining, one speculative chunk.
 
+**Async rounds** (``async_rounds=AsyncConfig(...)`` via ``run_federated``):
+the same chunk program runs staleness-aware rounds.  A fixed-shape ring
+buffer of ``max_staleness + 1`` pending cohorts rides in the donated carry;
+each round trains its cohort at departure, holds the updates back per-row
+delivery delays (``AsyncPlan.delays``), and applies the staleness-weighted
+Eq. 4 over whatever *landed* this round (weight ``decay(τ)``, renormalized).
+Strategy bookkeeping goes through ``ScanProgram.post_round_async`` with the
+flattened arrival buffer.  At ``max_staleness=0`` every update lands in its
+departure round with weight exactly 1.0 and the async chunk reproduces the
+synchronous chunk bitwise — records, ledger and written-back strategy state
+(tests/test_async_rounds.py).  All round-index arithmetic on the buffers
+goes through ``repro.fl.async_rounds.staleness_of`` (flcheck FLC007).
+
 Strategies opt in via ``Strategy.supports_scan`` / ``scan_program()`` — FLrce
 and every §4.1 baseline except PyramidFL, whose loss-driven selection/epoch
 plan cannot be precomputed; the mesh-sharded chunks additionally require
@@ -81,6 +94,7 @@ import numpy as np
 
 from repro.analysis.compile_guard import CompileCounter
 from repro.core.distributed import flatten_pytree, pad_dim, sharded_aggregate
+from repro.fl.async_rounds import AsyncConfig, resolve_async_plan, staleness_of
 from repro.data.device import (
     ChunkSchedule,
     DeviceClientStore,
@@ -151,8 +165,12 @@ class _ChunkRunner:
     def __init__(self, model, store: Optional[DeviceClientStore], unflatten,
                  program, transform, *, learning_rate: float, batch_size: int,
                  clients_per_round: int, eval_every: int, max_rounds: int,
-                 eval_x, eval_y, mesh=None, paged: bool = False):
+                 eval_x, eval_y, mesh=None, paged: bool = False,
+                 async_plan=None):
         self.model = model
+        # staleness-aware rounds: None ⇒ synchronous chunks (the arrival
+        # buffer carry slot is an empty pytree and the body is untouched)
+        self.async_plan = async_plan
         # resident mode closes the chunk over the full device store; paged
         # mode (store=None) receives each chunk's (P_cand, N_max, …) page as
         # ordinary program inputs instead
@@ -184,7 +202,7 @@ class _ChunkRunner:
     def _build(self, use_prox: bool, has_mask: bool, carry_shardings=None):
         store, program, unflatten = self.store, self.program, self.unflatten
         p, transform, mesh = self.p, self.transform, self.mesh
-        paged = self.paged
+        paged, async_plan = self.paged, self.async_plan
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
         sizes_f = self._sizes_f
@@ -210,7 +228,7 @@ class _ChunkRunner:
             """
 
             def body(carry, x_t):
-                w, sc, stopped, last_acc = carry
+                w, sc, abuf, stopped, last_acc = carry
                 t, phi, host_slots, bi_t, sw_t, sv_t, prox_t, mask_t, freeze_t = x_t
                 params_t = unflatten(w)
 
@@ -284,19 +302,101 @@ class _ChunkRunner:
                 if transform is not None:
                     flat = transform(t, ids, flat)
 
-                # --- Eq. 4 aggregation from the flat buffer ---------------------
-                total = jnp.sum(sel_sizes)
-                weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
-                if mesh is None:
-                    w_new = w + weights @ flat
-                else:
-                    w_new = sharded_aggregate(w, flat, weights, mesh, axes)
+                if async_plan is None:
+                    abuf_new = abuf
+                    tau_hist = None
 
-                # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -----------
-                if program.post_round is not None:
-                    sc_new, stop = program.post_round(sc_new, t, w, ids, flat, exploited)
+                    # --- Eq. 4 aggregation from the flat buffer -----------------
+                    total = jnp.sum(sel_sizes)
+                    weights = jnp.where(total > 0.0, sel_sizes / total, 1.0 / p)
+                    if mesh is None:
+                        w_new = w + weights @ flat
+                    else:
+                        w_new = sharded_aggregate(w, flat, weights, mesh, axes)
+
+                    # --- strategy bookkeeping + stop (Alg. 1/3 for FLrce) -------
+                    if program.post_round is not None:
+                        sc_new, stop = program.post_round(
+                            sc_new, t, w, ids, flat, exploited
+                        )
+                    else:
+                        stop = jnp.asarray(False)
                 else:
-                    stop = jnp.asarray(False)
+                    # --- staleness-aware round over the arrival ring buffer -----
+                    # The departing cohort parks in ring slot t mod B with its
+                    # landing round precomputed; the slot's previous occupant
+                    # departed B rounds ago and landed at latest S rounds later
+                    # (== t-1), so the slot is free by construction.  With
+                    # max_staleness=0 (B=1) the cohort is written and lands in
+                    # the same round, and every op below reproduces the
+                    # synchronous branch bitwise.
+                    s_max = async_plan.max_staleness
+                    b_depth = async_plan.depth
+                    k_slot = jnp.mod(t, b_depth)
+                    delays = async_plan.delays(t, ids)
+                    t32 = t.astype(jnp.int32)
+                    abuf = {
+                        "u": abuf["u"].at[k_slot].set(flat),
+                        "sizes": abuf["sizes"].at[k_slot].set(sel_sizes),
+                        "ids": abuf["ids"].at[k_slot].set(ids),
+                        "depart": abuf["depart"].at[k_slot].set(
+                            jnp.broadcast_to(t32, (p,))
+                        ),
+                        "land": abuf["land"].at[k_slot].set(t32 + delays),
+                        "valid": abuf["valid"].at[k_slot].set(
+                            jnp.ones((p,), bool)
+                        ),
+                        "anchor": abuf["anchor"].at[k_slot].set(w),
+                    }
+                    buf_u = abuf["u"].reshape(b_depth * p, -1)
+                    buf_sizes = abuf["sizes"].reshape(-1)
+                    buf_ids = abuf["ids"].reshape(-1)
+                    buf_depart = abuf["depart"].reshape(-1)
+                    buf_valid = abuf["valid"].reshape(-1)
+                    arrived = jnp.logical_and(
+                        buf_valid, abuf["land"].reshape(-1) == t32
+                    )
+                    tau = jnp.clip(staleness_of(buf_depart, t32), 0, s_max)
+                    dw = async_plan.decay_table[tau]
+
+                    # --- staleness-weighted Eq. 4 over this round's arrivals ----
+                    # (weight n_k · decay(τ_k), renormalized; an arrival-free
+                    # round leaves w unchanged: all-zero weights)
+                    scaled = jnp.where(arrived, buf_sizes * dw, 0.0)
+                    total = jnp.sum(scaled)
+                    n_arr = jnp.sum(arrived.astype(jnp.float32))
+                    weights = jnp.where(
+                        total > 0.0,
+                        scaled / total,
+                        jnp.where(arrived, 1.0 / jnp.maximum(n_arr, 1.0), 0.0),
+                    )
+                    if mesh is None:
+                        w_new = w + weights @ buf_u
+                    else:
+                        w_new = sharded_aggregate(w, buf_u, weights, mesh, axes)
+
+                    # --- strategy bookkeeping over the arrivals -----------------
+                    if program.post_round_async is not None:
+                        anchor_rows = jnp.repeat(abuf["anchor"], p, axis=0)
+                        sc_new, stop = program.post_round_async(
+                            sc_new, t, w, buf_ids, buf_depart, buf_u,
+                            anchor_rows, arrived, exploited,
+                        )
+                    else:
+                        stop = jnp.asarray(False)
+
+                    # landed rows leave the buffer; the rest stay pending
+                    abuf_new = {
+                        **abuf,
+                        "valid": jnp.logical_and(
+                            buf_valid, jnp.logical_not(arrived)
+                        ).reshape(b_depth, p),
+                    }
+                    tau_hist = (
+                        jnp.zeros((b_depth,), jnp.int32)
+                        .at[tau]
+                        .add(arrived.astype(jnp.int32))
+                    )
 
                 # --- per-round stats (device nanmean over clients) --------------
                 cnt = jnp.sum(sv, axis=1)
@@ -323,7 +423,9 @@ class _ChunkRunner:
                 # ``stopped`` enters the carry at the CHUNK boundary too, so a
                 # speculative chunk dispatched after a stop runs fully masked —
                 # its carry out is bitwise its carry in.
-                new_carry = (w_new, sc_new, jnp.logical_or(stopped, stop), acc)
+                new_carry = (
+                    w_new, sc_new, abuf_new, jnp.logical_or(stopped, stop), acc
+                )
                 carry_out = _tree_where(stopped, carry, new_carry)
                 out = {
                     "ids": ids,
@@ -334,60 +436,64 @@ class _ChunkRunner:
                     "mean_loss": mean_loss,
                     "valid": jnp.logical_not(stopped),
                 }
+                if tau_hist is not None:
+                    out["tau_hist"] = tau_hist
                 return carry_out, out
 
             return body
 
         def finish(carry, outs):
-            w, sc, stopped, last_acc = carry
+            w, sc, abuf, stopped, last_acc = carry
             if carry_shardings is not None:
                 # pin the output carry to the INPUT carry's layouts: without
                 # this GSPMD is free to emit e.g. FLrce's (M,) round map
                 # data-sharded, which changes the next call's jit signature
                 # (one silent full recompile per job) and breaks the donated
                 # in-place aliasing
-                w, sc, stopped, last_acc = jax.tree_util.tree_map(
+                w, sc, abuf, stopped, last_acc = jax.tree_util.tree_map(
                     jax.lax.with_sharding_constraint,
-                    (w, sc, stopped, last_acc), carry_shardings,
+                    (w, sc, abuf, stopped, last_acc), carry_shardings,
                 )
-            return w, sc, stopped, last_acc, outs
+            return w, sc, abuf, stopped, last_acc, outs
 
         if paged:
-            def chunk(w, sc, stopped, last_acc, cand, page_x, page_y,
+            def chunk(w, sc, abuf, stopped, last_acc, cand, page_x, page_y,
                       page_sizes, xs):
                 body = body_with(cand, page_x, page_y, page_sizes)
-                carry = jax.lax.scan(body, (w, sc, stopped, last_acc), xs)
+                carry = jax.lax.scan(body, (w, sc, abuf, stopped, last_acc), xs)
                 return finish(*carry)
         else:
-            def chunk(w, sc, stopped, last_acc, cand, xs):
+            def chunk(w, sc, abuf, stopped, last_acc, cand, xs):
                 body = body_with(cand, None, None, None)
-                carry = jax.lax.scan(body, (w, sc, stopped, last_acc), xs)
+                carry = jax.lax.scan(body, (w, sc, abuf, stopped, last_acc), xs)
                 return finish(*carry)
 
         # donated carry: the chunk's (D[,_pad]) flat model, the strategy
-        # carry (FLrce's Ω/H and the V/A maps), the cross-chunk stop flag and
+        # carry (FLrce's Ω/H and the V/A maps), the async arrival buffer (an
+        # empty pytree on synchronous jobs), the cross-chunk stop flag and
         # the accuracy scalar alias their outputs — no per-chunk copy of the
         # O(M·D) state.  The candidate remap and (paged) page tensors are
         # fresh per-chunk inputs and are NOT donated: at pipeline depth 2 the
         # two in-flight chunks each hold their own page.
-        return jax.jit(chunk, donate_argnums=(0, 1, 2, 3))
+        return jax.jit(chunk, donate_argnums=(0, 1, 2, 3, 4))
 
-    def run_chunk(self, w, sc, stopped, last_acc, cand, page, xs,
+    def run_chunk(self, w, sc, abuf, stopped, last_acc, cand, page, xs,
                   use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)
         if key not in self._cache:
             shardings = None
             if self.mesh is not None:
                 shardings = jax.tree_util.tree_map(
-                    lambda l: l.sharding, (w, sc, stopped, last_acc)
+                    lambda l: l.sharding, (w, sc, abuf, stopped, last_acc)
                 )
             self._cache[key] = self._build(use_prox, has_mask, shardings)
         if self.paged:
             page_x, page_y, page_sizes = page
             return self._cache[key](
-                w, sc, stopped, last_acc, cand, page_x, page_y, page_sizes, xs
+                w, sc, abuf, stopped, last_acc, cand, page_x, page_y,
+                page_sizes, xs
             )
-        return self._cache[key](w, sc, stopped, last_acc, cand, xs)
+        return self._cache[key](w, sc, abuf, stopped, last_acc, cand, xs)
 
 
 @dataclasses.dataclass
@@ -424,6 +530,7 @@ def run_scan_driver(
     mesh=None,
     pipeline: bool = True,
     paged: bool = False,
+    async_rounds: Optional[AsyncConfig] = None,
 ):
     """Algorithm 4's outer loop as jitted round chunks.  Called by
     ``run_federated(driver="scan")`` — with ``mesh`` for
@@ -441,6 +548,14 @@ def run_scan_driver(
     same pipeline.  Device memory becomes O(P_cand) flat in M; with the
     default full-universe candidates the results stay bitwise the resident
     driver's.
+
+    ``async_rounds=AsyncConfig(...)`` (``run_federated(async_rounds=...)``)
+    runs staleness-aware rounds: departing cohorts park in a ring buffer in
+    the donated carry and land ``τ ∈ [0, max_staleness]`` rounds later under
+    the staleness-weighted Eq. 4 (see the module docstring).  Requires the
+    resident store and, for strategies with per-round bookkeeping, a
+    ``post_round_async`` hook; ``max_staleness=0`` reproduces the
+    synchronous driver bitwise.
     """
     from repro.fl.rounds import RoundRecord, finalize_result
 
@@ -463,6 +578,20 @@ def run_scan_driver(
         )
     if program.select is not None and program.explore_phis is None:
         raise ValueError("a ScanProgram with device select must provide explore_phis")
+    if async_rounds is not None:
+        if paged:
+            raise ValueError(
+                "async_rounds requires client_store='resident': the paged "
+                "store's per-chunk candidate pages cannot cover cohorts that "
+                "land in a later chunk"
+            )
+        if program.post_round is not None and program.post_round_async is None:
+            raise ValueError(
+                f"{strategy.name}'s ScanProgram has per-round bookkeeping "
+                "(post_round) but no post_round_async: async rounds would "
+                "silently feed stale arrivals to the synchronous hook "
+                "(FLrce withholds the async hook under sketched V/A maps)"
+            )
 
     params = init_params if init_params is not None else model.init(jax.random.PRNGKey(seed))
     n_params = param_count(params)
@@ -496,13 +625,27 @@ def run_scan_driver(
             jnp.pad(w, (0, d_pad - n_params)),
             NamedSharding(mesh, PartitionSpec(axes)),
         )
+    async_plan = None
+    if async_rounds is not None:
+        # the plan's lookup tables (decay, trace) are replicated chunk
+        # constants — same placement discipline as the other chunk inputs
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            _rep = NamedSharding(mesh, PartitionSpec())
+        else:
+            _rep = next(iter(w.devices()))
+        async_plan = resolve_async_plan(
+            async_rounds, num_clients=m, seed=seed,
+            put=lambda a: jax.device_put(a, _rep),
+        )
     runner = _ChunkRunner(
         model, None if paged else store, unflatten, program, transform,
         learning_rate=learning_rate, batch_size=batch_size,
         clients_per_round=strategy.p, eval_every=eval_every,
         max_rounds=max_rounds,
         eval_x=jnp.asarray(dataset.eval_x), eval_y=jnp.asarray(dataset.eval_y),
-        mesh=mesh, paged=paged,
+        mesh=mesh, paged=paged, async_plan=async_plan,
     )
 
     sc = program.carry
@@ -534,6 +677,36 @@ def run_scan_driver(
     sc = jax.tree_util.tree_map(commit, sc)
     es_flag = commit(jnp.asarray(False))   # the cross-chunk stop flag
     last_acc = commit(jnp.float32(0.0))
+
+    # the async arrival ring buffer rides in the donated carry: B = S+1
+    # slots of one (P, D) pending cohort each, plus its departure-round
+    # anchor models.  Synchronous jobs carry an empty pytree instead — the
+    # chunk program is byte-identical to the pre-async driver's.
+    abuf: Any = {}
+    if async_plan is not None:
+        b_depth, p_sel, d_flat = async_plan.depth, strategy.p, int(w.shape[0])
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            # O(D) buffers live D-sharded like the round buffers they hold;
+            # the O(B·P) metadata stays replicated
+            put_u = lambda a: jax.device_put(
+                a, NamedSharding(mesh, PartitionSpec(None, None, axes))
+            )
+            put_anchor = lambda a: jax.device_put(
+                a, NamedSharding(mesh, PartitionSpec(None, axes))
+            )
+        else:
+            put_u = put_anchor = commit
+        abuf = {
+            "u": put_u(jnp.zeros((b_depth, p_sel, d_flat), jnp.float32)),
+            "sizes": commit(jnp.zeros((b_depth, p_sel), jnp.float32)),
+            "ids": commit(jnp.zeros((b_depth, p_sel), jnp.int32)),
+            "depart": commit(jnp.zeros((b_depth, p_sel), jnp.int32)),
+            "land": commit(jnp.full((b_depth, p_sel), -1, jnp.int32)),
+            "valid": commit(jnp.zeros((b_depth, p_sel), bool)),
+            "anchor": put_anchor(jnp.zeros((b_depth, d_flat), jnp.float32)),
+        }
 
     # ------------------------------------------------------------------
     # host-side chunk phases: build (pre-device) and flush (post-device)
@@ -750,6 +923,14 @@ def run_scan_driver(
                 ledger.charge_training(flops)
                 ledger.charge_download(n_params, cfg.download_fraction)
                 ledger.charge_upload(n_params, cfg.upload_fraction)
+            if "tau_hist" in outs:
+                # async rounds: uploads were charged above at DEPARTURE (the
+                # cohort trained and sent this round); what lands now is only
+                # recorded, with its staleness — total charges stay identical
+                # to the synchronous run's
+                hist = np.asarray(outs["tau_hist"][i])
+                ledger.record_arrivals(hist)
+                stats["async_arrivals"] += int(hist.sum())
             ledger.end_round()
             rec = RoundRecord(
                 t=t,
@@ -805,6 +986,9 @@ def run_scan_driver(
         "page_bytes_h2d": 0,
         "peak_live_bytes": 0,
     }
+    if async_plan is not None:
+        stats["async_max_staleness"] = async_plan.max_staleness
+        stats["async_arrivals"] = 0
     pending: "deque[Tuple[_ChunkPlan, Any]]" = deque()
     stopped = False
     any_flushed = False
@@ -830,9 +1014,9 @@ def run_scan_driver(
                 b0 = time.perf_counter()
                 plan = build_chunk(t_dispatch)
                 c0 = compile_counter.compiles
-                w, sc, es_flag, last_acc, outs = runner.run_chunk(
-                    w, sc, es_flag, last_acc, plan.cand_dev, plan.page, plan.xs,
-                    plan.use_prox, plan.has_mask,
+                w, sc, abuf, es_flag, last_acc, outs = runner.run_chunk(
+                    w, sc, abuf, es_flag, last_acc, plan.cand_dev, plan.page,
+                    plan.xs, plan.use_prox, plan.has_mask,
                 )
                 stats["compiles_chunk"] += compile_counter.compiles - c0
                 stats["host_build_s"] += time.perf_counter() - b0
@@ -885,6 +1069,12 @@ def run_scan_driver(
     finally:
         compile_counter.__exit__()
         stats["compiles_total"] = compile_counter.compiles
+    if async_plan is not None:
+        # updates still parked in the buffer when the job ended (stop or
+        # round budget): departed + charged, never landed
+        stats["async_pending_at_exit"] = int(
+            np.sum(np.asarray(jax.device_get(abuf["valid"])))
+        )
     stats["total_s"] = time.perf_counter() - t_start
     return finalize_result(
         strategy=strategy,

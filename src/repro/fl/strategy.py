@@ -45,6 +45,18 @@ class ScanProgram:
       device.  ``None`` ⇒ no bookkeeping and never stops.  Only allowed
       together with ``select`` (a host-selected chunk cannot react to a
       device stop mid-chunk).
+    * ``post_round_async(carry, t, w_before, ids, t_depart, update_matrix,
+      anchor_rows, arrived, exploited) -> (carry, stop)`` — the
+      out-of-order-arrival form of ``post_round``, consumed instead of it
+      when the driver runs ``async_rounds``.  The (K,) / (K, D) operands are
+      the flattened arrival buffer: ``arrived`` masks the rows landing this
+      round, ``t_depart`` carries each row's departure round and
+      ``anchor_rows`` the global model it departed from.  Required whenever
+      ``post_round`` is set and the strategy declares ``supports_async``
+      (a strategy with bookkeeping must re-derive it for stale arrivals —
+      the driver refuses to silently feed an arrival buffer to the
+      synchronous hook).  ``None`` with ``post_round=None`` is fine:
+      stateless strategies need no async variant.
     * ``explore_phis(ts) -> float32 array`` — host-precomputed explore
       probabilities for a chunk's rounds (``select`` consumes them traced;
       precomputing in f64 keeps the Bernoulli flip bit-identical to the host
@@ -65,6 +77,7 @@ class ScanProgram:
     post_round: Optional[Callable] = None
     explore_phis: Optional[Callable] = None
     finalize: Optional[Callable] = None
+    post_round_async: Optional[Callable] = None
 
 
 @dataclasses.dataclass
@@ -200,6 +213,29 @@ class Strategy:
     ``ScanProgram.select`` (slots, not ids) and may narrow the candidates
     via :meth:`propose_candidates`.  Only meaningful together with
     ``supports_scan`` — the paged store exists only under ``driver="scan"``.
+    """
+
+    supports_async: bool = False
+    """True ⇒ ``run_federated(..., async_rounds=AsyncConfig(...))`` may run
+    this strategy with staleness-aware rounds on the compiled driver.
+
+    On top of ``supports_scan`` (still required — async rounds exist only on
+    the scan driver) this promises:
+
+    * the strategy's update semantics tolerate delayed application: an
+      update trained at round ``t`` may be folded into the model at round
+      ``t + τ`` under the staleness-weighted Eq. 4
+      (``repro.fl.aggregation.staleness_weights``);
+    * if the strategy has per-round bookkeeping (``ScanProgram.post_round``),
+      its ``scan_program()`` also provides ``post_round_async`` re-derived
+      for out-of-order arrival (FLrce wires the server's
+      ``scan_ingest_async`` / ``scan_check_early_stop_async``);
+    * at ``max_staleness=0`` the async chunk must reproduce the synchronous
+      chunk bitwise — the equivalence tests/test_async_rounds.py holds every
+      declaring strategy to.
+
+    Strategies that keep the default False are rejected by
+    ``run_federated``'s async validation (see ``docs/support-matrix.md``).
     """
 
     fallback_reason: Optional[str] = None

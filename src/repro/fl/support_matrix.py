@@ -39,13 +39,22 @@ END_MARKER = "<!-- END GENERATED MATRIX -->"
 _HEADER = (
     "| Strategy | `driver=\"loop\"` (sequential / batched / sharded) | "
     "`driver=\"scan\"` (engine=batched) | `driver=\"scan\"` (engine=sharded) | "
-    "`client_store=\"paged\"` | Device update transform |\n"
-    "| --- | --- | --- | --- | --- | --- |"
+    "`client_store=\"paged\"` | `async_rounds=` | Device update transform |\n"
+    "| --- | --- | --- | --- | --- | --- | --- |"
 )
 
 
 def _scan_cell(cls: Type[Strategy]) -> str:
     return "compiled" if cls.supports_scan else "falls back to batched loop"
+
+
+def _async_cell(cls: Type[Strategy]) -> str:
+    # staleness-aware rounds run only inside the compiled chunk drivers, and
+    # a strategy must re-derive its ingest for out-of-order arrival
+    # (ScanProgram.post_round_async) or keep no per-round server state
+    if not cls.supports_scan:
+        return "n/a (needs compiled chunks)"
+    return "✓" if cls.supports_async else "—"
 
 
 def _paged_cell(cls: Type[Strategy]) -> str:
@@ -75,7 +84,7 @@ def render_support_matrix() -> str:
         rows.append(
             f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | "
             f"{_sharded_scan_cell(cls)} | {_paged_cell(cls)} | "
-            f"{_transform_cell(cls)} |"
+            f"{_async_cell(cls)} | {_transform_cell(cls)} |"
         )
     fallbacks = [
         cls for cls in STRATEGY_CLASSES
@@ -99,6 +108,10 @@ def scan_capable_names() -> List[str]:
 
 def sharded_scan_capable_names() -> List[str]:
     return [cls.name for cls in STRATEGY_CLASSES if cls.supports_sharded_scan]
+
+
+def async_capable_names() -> List[str]:
+    return [cls.name for cls in STRATEGY_CLASSES if cls.supports_async]
 
 
 if __name__ == "__main__":

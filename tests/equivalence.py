@@ -1,0 +1,89 @@
+"""Shared run-equivalence assertions for the driver test suites.
+
+Two FL runs are compared at one of two bars:
+
+* ``bitwise=True`` — the two runs executed the SAME compiled program over the
+  same inputs (pipeline on/off, paged vs resident, async at max_staleness=0
+  vs sync) so every record field, every ledger charge and every final
+  parameter must be bit-identical.  "Close" is a bug here.
+* ``bitwise=False`` — the runs executed *different* programs that must agree
+  where the math is exact (selections, flags, evaluation schedule, host-side
+  ledger arithmetic) and within fp32 tolerance elsewhere (accuracies,
+  losses); use this for loop-vs-scan comparisons where reduction order
+  differs inside the round.
+
+Ledger comparison is over the NUMERIC fields (energy_j, bytes_up,
+bytes_down, rounds) — never dataclass equality: async runs carry an
+``arrivals_by_staleness`` histogram the synchronous ledger leaves empty, and
+that bookkeeping difference is not a resource-accounting difference.
+"""
+import jax
+import numpy as np
+import pytest
+
+
+def assert_runs_equivalent(a, b, *, bitwise=True, accuracy_atol=2e-3,
+                           loss_abs=1e-4, ledger_rel=1e-12, params_atol=None):
+    """Assert two FLResults describe the same federated job.
+
+    Args:
+      a, b: ``repro.fl.FLResult`` pairs to compare.
+      bitwise: exact equality everywhere (same compiled program) vs the
+        fp32-tolerant bar (different programs, same math).
+      accuracy_atol / loss_abs / ledger_rel: tolerances for the non-bitwise
+        mode; ignored when ``bitwise=True``.
+      params_atol: in tolerant mode, compare final params to this atol; the
+        default ``None`` skips the parameter check (loop-vs-scan reduction
+        order makes tight bounds fragile).  Bitwise mode always compares
+        params exactly.
+    """
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert ra.t == rb.t
+        assert ra.selected == rb.selected, ra.t
+        assert ra.exploited == rb.exploited, ra.t
+        assert ra.stopped == rb.stopped, ra.t
+        assert ra.evaluated == rb.evaluated, ra.t
+        if bitwise:
+            assert ra.accuracy == rb.accuracy, ra.t
+        else:
+            np.testing.assert_allclose(ra.accuracy, rb.accuracy,
+                                       atol=accuracy_atol)
+        if np.isnan(ra.mean_client_loss):
+            assert np.isnan(rb.mean_client_loss), ra.t
+        elif bitwise:
+            assert ra.mean_client_loss == rb.mean_client_loss, ra.t
+        else:
+            assert ra.mean_client_loss == pytest.approx(
+                rb.mean_client_loss, abs=loss_abs
+            ), ra.t
+        # ledger charges are pure host arithmetic over identical selections:
+        # exact at either bar
+        assert ra.energy_kj == rb.energy_kj, ra.t
+        assert ra.bytes_gb == rb.bytes_gb, ra.t
+    assert a.rounds_run == b.rounds_run
+    assert a.stopped_early == b.stopped_early
+    if bitwise:
+        assert a.final_accuracy == b.final_accuracy
+    else:
+        assert a.final_accuracy == pytest.approx(b.final_accuracy,
+                                                 abs=accuracy_atol)
+    la, lb = a.ledger, b.ledger
+    if bitwise:
+        assert la.energy_j == lb.energy_j
+        assert la.bytes_up == lb.bytes_up
+        assert la.bytes_down == lb.bytes_down
+        assert la.total_bytes == lb.total_bytes
+        assert la.rounds == lb.rounds
+    else:
+        assert la.energy_j == pytest.approx(lb.energy_j, rel=ledger_rel)
+        assert la.total_bytes == pytest.approx(lb.total_bytes, rel=ledger_rel)
+    if bitwise:
+        for pa, pb in zip(jax.tree_util.tree_leaves(a.final_params),
+                          jax.tree_util.tree_leaves(b.final_params)):
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    elif params_atol is not None:
+        for pa, pb in zip(jax.tree_util.tree_leaves(a.final_params),
+                          jax.tree_util.tree_leaves(b.final_params)):
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                       atol=params_atol)

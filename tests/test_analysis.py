@@ -481,10 +481,70 @@ def test_conformance_table_lists_shipped_strategies():
 
 
 # ---------------------------------------------------------------------------
+# FLC007 staleness-arithmetic
+# ---------------------------------------------------------------------------
+def test_flc007_inline_departure_subtraction_fires():
+    src = """
+    def ingest(t_land, t_depart):
+        tau = t_land - t_depart
+        return tau
+    """
+    assert rule_ids(src, select=["FLC007"]) == ["FLC007"]
+
+
+def test_flc007_buffer_field_and_augassign_fire():
+    src = """
+    def weights(abuf, t):
+        tau = t - abuf["depart"]
+        t -= arrival_round
+        return tau
+    """
+    assert rule_ids(src, select=["FLC007"]) == ["FLC007", "FLC007"]
+
+
+def test_flc007_inside_staleness_of_is_exempt():
+    src = """
+    def staleness_of(t_depart, t_land):
+        return t_land - t_depart
+    """
+    assert rule_ids(src, select=["FLC007"]) == []
+
+
+def test_flc007_comparisons_and_additions_are_clean():
+    src = """
+    import jax.numpy as jnp
+    from repro.fl.async_rounds import staleness_of
+
+    def round_step(abuf, t32, delays):
+        land = t32 + delays
+        arrived = abuf["land"].reshape(-1) == t32
+        tau = staleness_of(abuf["depart"].reshape(-1), t32)
+        return land, arrived, tau
+    """
+    assert rule_ids(src, select=["FLC007"]) == []
+
+
+def test_flc007_unrelated_subtraction_is_clean():
+    src = """
+    def bench(t0, t1):
+        return t1 - t0
+    """
+    assert rule_ids(src, select=["FLC007"]) == []
+
+
+def test_flc007_disable_comment_suppresses():
+    src = """
+    def plot(arrival_ts, start_ts):
+        return arrival_ts - start_ts  # flcheck: disable=FLC007
+    """
+    assert rule_ids(src, select=["FLC007"]) == []
+
+
+# ---------------------------------------------------------------------------
 # runner / CLI / self-application
 # ---------------------------------------------------------------------------
 def test_rule_registry_is_complete():
-    assert sorted(RULES) == [f"FLC00{i}" for i in range(1, 7)]
+    assert sorted(RULES) == [f"FLC00{i}" for i in range(1, 8)]
     table = render_rule_table()
     for rid, info in RULES.items():
         assert rid in table and info.name in table

@@ -5,8 +5,9 @@ XLA:CPU honors input-output aliasing, so pointer equality is exact evidence)
 and mark their inputs deleted:
 
 * the scan driver's chunk carry (``_ChunkRunner`` jits with
-  ``donate_argnums=(0, 1, 2, 3)``): the flat model, the cross-chunk stop
-  flag and the accuracy scalar update in place chunk over chunk;
+  ``donate_argnums=(0, 1, 2, 3, 4)``): the flat model, the async arrival
+  buffer, the cross-chunk stop flag and the accuracy scalar update in
+  place chunk over chunk;
 * the loop engines' flat (P, D) update buffer through the jitted
   ``update_transform`` application (``donate_argnums=(2,)``);
 * ``BatchedCohortTrainer``'s (P, S) step-validity plan buffer, which aliases
@@ -80,8 +81,8 @@ def test_chunk_carry_donated_in_place(tiny_fed):
     stopped = jax.device_put(jnp.asarray(False), dev)
     ptr_w = w.unsafe_buffer_pointer()
     ptr_cand = cand.unsafe_buffer_pointer()
-    w2, sc2, es2, acc2, outs = runner.run_chunk(
-        w, {}, stopped, last_acc, cand, None, xs, False, False
+    w2, sc2, abuf2, es2, acc2, outs = runner.run_chunk(
+        w, {}, {}, stopped, last_acc, cand, None, xs, False, False
     )
     assert w2.shape == w.shape
     assert w2.unsafe_buffer_pointer() == ptr_w          # aliased in place
@@ -95,7 +96,8 @@ def test_chunk_carry_donated_in_place(tiny_fed):
     assert np.all(np.asarray(outs["valid"]))
     # a second chunk donates the returned carry the same way
     ptr_w2 = w2.unsafe_buffer_pointer()
-    w3, *_ = runner.run_chunk(w2, sc2, es2, acc2, cand, None, xs, False, False)
+    w3, *_ = runner.run_chunk(w2, sc2, abuf2, es2, acc2, cand, None, xs,
+                              False, False)
     assert w3.unsafe_buffer_pointer() == ptr_w2
     assert w2.is_deleted()
 

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from equivalence import assert_runs_equivalent
 from repro.data import make_federated_classification
 from repro.fl import FLrce, run_federated
 from repro.fl.baselines import Dropout, FedAvg, Fedprox, TimelyFL
@@ -23,10 +24,16 @@ from repro.launch.mesh import make_debug_mesh
 from repro.models.cnn import MLPClassifier, param_count
 
 MULTI = jax.device_count() >= 8
-needs8 = pytest.mark.skipif(
-    not MULTI,
-    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
-)
+
+
+def needs8(fn):
+    """8-device-only test: skips without the forced host-device flag and
+    carries the `multidevice` marker for the CI test-matrix split."""
+    skip = pytest.mark.skipif(
+        not MULTI,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+    )
+    return pytest.mark.multidevice(skip(fn))
 
 
 @pytest.fixture(scope="module")
@@ -61,31 +68,7 @@ def _run_pair(model, ds, make_strategy, *, chunk=3, engine="batched",
 def _assert_records_identical(ser, pip):
     """Bitwise record/ledger equality — same compiled program, same inputs,
     only the host's dispatch order differs (wall_s excepted)."""
-    assert len(ser.records) == len(pip.records)
-    for a, b in zip(ser.records, pip.records):
-        assert a.t == b.t
-        assert a.selected == b.selected
-        assert a.exploited == b.exploited
-        assert a.stopped == b.stopped
-        assert a.evaluated == b.evaluated
-        assert a.accuracy == b.accuracy, a.t
-        if np.isnan(a.mean_client_loss):
-            assert np.isnan(b.mean_client_loss)
-        else:
-            assert a.mean_client_loss == b.mean_client_loss, a.t
-        assert a.energy_kj == b.energy_kj, a.t
-        assert a.bytes_gb == b.bytes_gb, a.t
-    assert ser.rounds_run == pip.rounds_run
-    assert ser.stopped_early == pip.stopped_early
-    assert ser.final_accuracy == pip.final_accuracy
-    assert ser.ledger.energy_j == pip.ledger.energy_j
-    assert ser.ledger.total_bytes == pip.ledger.total_bytes
-    assert ser.ledger.bytes_up == pip.ledger.bytes_up
-    assert ser.ledger.bytes_down == pip.ledger.bytes_down
-    assert ser.ledger.rounds == pip.ledger.rounds
-    for a, b in zip(jax.tree_util.tree_leaves(ser.final_params),
-                    jax.tree_util.tree_leaves(pip.final_params)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert_runs_equivalent(ser, pip, bitwise=True)
 
 
 def _strategies(dim):

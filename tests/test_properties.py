@@ -14,7 +14,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import cossim, orthdist, relationship_row, select_clients, should_stop
 from repro.data.partition import dirichlet_label_partition
-from repro.fl.aggregation import aggregation_weights
+from repro.fl.aggregation import aggregation_weights, staleness_weights
+from repro.fl.async_rounds import default_decay
 from repro.kernels import ops
 
 finite_vec = st.lists(
@@ -159,3 +160,55 @@ def test_topk_mask_sparsity_property(d, keep):
     # block (zero-padded entries tie at the threshold and inflate the count)
     slack = 512 / d + 0.02
     assert nz.mean() <= min(1.0, keep + slack)
+
+
+# ---------------------------------------------------------------------------
+# staleness-weighted aggregation (async rounds, delayed Eq. 4)
+# ---------------------------------------------------------------------------
+_staleness_case = st.lists(
+    st.tuples(st.integers(1, 1000), st.integers(0, 5)), min_size=1, max_size=10
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_staleness_case)
+def test_staleness_weights_simplex(case):
+    counts = [n for n, _ in case]
+    taus = [t for _, t in case]
+    w = staleness_weights(counts, taus, default_decay)
+    assert w.sum() == pytest.approx(1.0, abs=1e-5)
+    assert (w >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=10))
+def test_staleness_weights_tau_zero_recovers_eq4_bitwise(counts):
+    """decay(0) == 1.0 multiplies every count by exactly 1.0: the staleness
+    weighting at τ=0 is BITWISE plain Eq. 4 — the host-side statement of the
+    async ≡ sync equivalence spine."""
+    w_async = staleness_weights(counts, [0] * len(counts), default_decay)
+    w_sync = aggregation_weights(counts)
+    assert np.array_equal(w_async, w_sync)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_staleness_case, st.integers(0, 6))
+def test_staleness_weights_permutation_invariant(case, seed):
+    """Weights follow the (count, τ) pair, not the arrival-slot order — the
+    flattened ring buffer may present arrivals in any slot permutation."""
+    counts = np.asarray([n for n, _ in case], np.float64)
+    taus = np.asarray([t for _, t in case])
+    perm = np.random.default_rng(seed).permutation(len(case))
+    w = staleness_weights(counts, taus, default_decay)
+    w_perm = staleness_weights(counts[perm], taus[perm], default_decay)
+    assert np.array_equal(w[perm], w_perm)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 1000), st.integers(0, 5), st.integers(1, 5))
+def test_staleness_weights_monotone_in_tau(count, tau, extra):
+    """For a nonincreasing decay, a staler copy of the same update never
+    outweighs the fresher one (τ strictly increases ⇒ weight strictly
+    decreases under 1/(1+τ))."""
+    w = staleness_weights([count, count], [tau, tau + extra], default_decay)
+    assert w[0] > w[1]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from equivalence import assert_runs_equivalent
 from repro.core.selection import explore_probability, select_clients, select_clients_device
 from repro.data import DeviceClientStore, build_chunk_schedule, make_federated_classification
 from repro.fl import FLrce, run_federated
@@ -44,22 +45,7 @@ def _run_both(model, ds, make_strategy, *, chunk=3, **kw):
 
 
 def _assert_records_match(bat, scn):
-    assert [r.selected for r in bat.records] == [r.selected for r in scn.records]
-    assert [r.exploited for r in bat.records] == [r.exploited for r in scn.records]
-    assert [r.stopped for r in bat.records] == [r.stopped for r in scn.records]
-    assert [r.evaluated for r in bat.records] == [r.evaluated for r in scn.records]
-    np.testing.assert_allclose(bat.accuracy_curve(), scn.accuracy_curve(), atol=2e-3)
-    for a, b in zip(bat.records, scn.records):
-        if np.isnan(a.mean_client_loss):
-            assert np.isnan(b.mean_client_loss)
-        else:
-            assert a.mean_client_loss == pytest.approx(b.mean_client_loss, abs=1e-4)
-    assert bat.rounds_run == scn.rounds_run
-    assert bat.stopped_early == scn.stopped_early
-    assert bat.final_accuracy == pytest.approx(scn.final_accuracy, abs=2e-3)
-    # ledger bookkeeping is pure host arithmetic over identical selections
-    assert bat.ledger.energy_j == pytest.approx(scn.ledger.energy_j, rel=1e-12)
-    assert bat.ledger.total_bytes == pytest.approx(scn.ledger.total_bytes, rel=1e-12)
+    assert_runs_equivalent(bat, scn, bitwise=False)
 
 
 # ---------------------------------------------------------------------------

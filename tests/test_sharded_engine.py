@@ -47,10 +47,16 @@ from repro.models.cnn import MLPClassifier, param_count
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 MULTI = jax.device_count() >= 8
-needs8 = pytest.mark.skipif(
-    not MULTI,
-    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
-)
+
+
+def needs8(fn):
+    """8-device-only test: skips without the forced host-device flag and
+    carries the `multidevice` marker for the CI test-matrix split."""
+    skip = pytest.mark.skipif(
+        not MULTI,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+    )
+    return pytest.mark.multidevice(skip(fn))
 
 
 @pytest.fixture(scope="module")

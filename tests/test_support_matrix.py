@@ -76,6 +76,17 @@ def test_sharded_scan_support_axis():
         assert not cls.supports_sharded_scan, cls.name
 
 
+def test_async_support_axis():
+    """Staleness-aware rounds: exactly the strategies whose ingest is either
+    stateless per round (FedAvg, Fedprox) or re-derived for out-of-order
+    arrival (FLrce's post_round_async) declare supports_async."""
+    from repro.fl.support_matrix import async_capable_names
+
+    assert async_capable_names() == ["flrce", "fedavg", "fedprox"]
+    for cls in (Fedcom, QuantizedFL, Dropout, TimelyFL, PyramidFL):
+        assert not cls.supports_async, cls.name
+
+
 # ---------------------------------------------------------------------------
 # docs/writing-a-strategy.md worked example passes the equivalence harness
 # ---------------------------------------------------------------------------
