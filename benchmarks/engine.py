@@ -200,6 +200,107 @@ def _assert_pipelined_identical(ser, pip, leg: str):
     assert ser.ledger.energy_j == pip.ledger.energy_j, leg
 
 
+def _transformer_leg(chunk: int):
+    """Federated transformer fine-tuning on the composed (data, model) mesh,
+    roofline-grounded.
+
+    Two runs of the same job (tiny ``ArchConfig`` through ``LMClassifier``,
+    FedAvg cohorts, ``driver="scan", engine="sharded"`` on
+    ``make_engine_mesh()``):
+
+    1. the TIMED run, compile-sentinel-asserted (exactly one chunk compile —
+       the model-axis sharding must not cost the pinned-layout discipline);
+    2. an UNASSERTED capture run with ``repro.fl.scan_driver._hlo_capture``
+       installed, whose compiled chunk HLO feeds ``roofline.hlo_stats``.
+
+    The leg's payload compares the per-round per-device MEASURED dot FLOPs
+    (from the post-partitioning HLO, while-trip-aware) and the EXPECTED
+    model FLOPs (6·N·tokens) against the same analytic HBM traffic model
+    (``fl_round_hbm_bytes`` — fp32 SGD, remat activation passes), and
+    asserts both classify the training hot loop on the same side of the
+    ``roofline.hw`` ridge: compute-bound exactly where the hardware model
+    says it should be (the tiny smoke model sits far below the ridge, so
+    both sides must say memory-bound — a measured "compute" here would mean
+    the HLO is burning FLOPs the model doesn't ask for).
+    """
+    import jax
+
+    import repro.fl.scan_driver as scan_driver
+    from repro.configs.base import ATTN_GLOBAL, ArchConfig
+    from repro.data import make_federated_lm
+    from repro.fl.baselines import FedAvg
+    from repro.models import LMClassifier
+    from repro.roofline import fl_round_hbm_bytes, hw
+    from repro.roofline.hlo_stats import analyze
+
+    seq, vocab, cohort, m, n_per = 8, 64, 4, 8, 32
+    cfg = ArchConfig(
+        name="tiny-lm", family="bench", num_layers=2, d_model=16,
+        num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=vocab,
+        pattern=(ATTN_GLOBAL,), dtype="float32",
+    )
+    model = LMClassifier(cfg, seq_len=seq)
+    ds = make_federated_lm(num_clients=m, samples_per_client=n_per,
+                           seq_len=seq, vocab_size=vocab, num_eval=32)
+    mk = lambda: FedAvg(m, cohort, 1, seed=0)
+    rounds = 2 * chunk
+
+    res, _, spr = run("sharded", ds, model, rounds, epochs=1, driver="scan",
+                      chunk=chunk, warmup=chunk, strategy_fn=mk)
+    assert res.rounds_run == rounds, res.rounds_run
+    assert np.isfinite(res.final_accuracy), res.final_accuracy
+    _assert_one_chunk_compile(res, "transformer")
+
+    scan_driver._hlo_capture = captured = []
+    try:
+        run("sharded", ds, model, chunk, epochs=1, driver="scan",
+            chunk=chunk, warmup=chunk, strategy_fn=mk)
+    finally:
+        scan_driver._hlo_capture = None
+    assert captured, "transformer leg captured no chunk HLO"
+
+    from repro.launch.mesh import make_engine_mesh
+
+    chips = jax.device_count()       # make_engine_mesh() spans all devices
+    data_shards = make_engine_mesh().shape["data"]
+    st = analyze(captured[0], chips)
+    local_steps = max(1, n_per // BATCH)
+    hlo_flops_round = st.dot_flops / chunk            # per device, per round
+    # activation-side dot work is sharded over the data axis only (rows are
+    # replicated across the model axis), so the ideal per-device model FLOPs
+    # divide by data_shards — same physics as the byte model below
+    model_flops_round = (
+        model.flops_per_sample() * n_per * cohort / data_shards
+    )
+    bytes_round = fl_round_hbm_bytes(
+        cfg, seq_len=seq, batch=min(BATCH, n_per), local_steps=local_steps,
+        cohort=cohort, chips=chips, data_shards=data_shards,
+    )
+    ridge = hw.PEAK_FLOPS_BF16 / hw.HBM_BW
+    measured = hlo_flops_round / bytes_round
+    expected = model_flops_round / bytes_round
+    classify = lambda x: "compute" if x > ridge else "memory"
+    assert classify(measured) == classify(expected), (
+        f"transformer roofline disagrees with hw model: measured "
+        f"{measured:.1f} FLOP/B vs expected {expected:.1f} FLOP/B around the "
+        f"ridge {ridge:.1f} — the compiled chunk's arithmetic intensity is "
+        "on the wrong side of the hardware model")
+    payload = {
+        "arch": cfg.name,
+        "mesh_devices": chips,
+        "hlo_dot_flops_per_round_per_device": hlo_flops_round,
+        "model_flops_per_round_per_device": model_flops_round,
+        "analytic_hbm_bytes_per_round_per_device": bytes_round,
+        "flop_per_byte_measured": measured,
+        "flop_per_byte_expected": expected,
+        "ridge_flop_per_byte": ridge,
+        "bottleneck": classify(measured),
+        "collective_bytes_per_device": st.collective_bytes,
+        "collective_by_kind": st.collective_by_kind,
+    }
+    return res, spr, payload
+
+
 def write_report(path: str, per_round: dict, meta: dict,
                  compiles: dict = None) -> None:
     import jax
@@ -416,9 +517,17 @@ def main(argv=None) -> int:
             "schedule_bytes_host_100k": st_100k["schedule_bytes_host"],
         }
 
+        # federated transformer fine-tuning on the composed (data, model)
+        # mesh, with the per-round FLOP/byte roofline report from the
+        # compiled chunk's HLO (see _transformer_leg)
+        res_tf, per_round["transformer"], tf_roofline = _transformer_leg(chunk)
+        compiles["transformer"] = _leg_compiles(res_tf)
+        host_split["transformer"] = _host_split(res_tf)
+
         write_report(args.out, per_round,
                      {"mode": "smoke", "clients": 4, "steps": 4,
                       "scan_chunk_rounds": chunk,
+                      "transformer_roofline": tf_roofline,
                       "cpu_cores": len(os.sched_getaffinity(0)),
                       "scan_speedup_vs_batched": speedup,
                       "scan_speedup_vs_batched_fedcom": speedup_c,
@@ -429,6 +538,11 @@ def main(argv=None) -> int:
                       "paged_fleet": paged_fleet,
                       "host_split": host_split},
                      compiles=compiles)
+        print(f"transformer roofline: "
+              f"{tf_roofline['flop_per_byte_measured']:.2f} FLOP/B measured vs "
+              f"{tf_roofline['flop_per_byte_expected']:.2f} expected "
+              f"(ridge {tf_roofline['ridge_flop_per_byte']:.0f}, "
+              f"{tf_roofline['bottleneck']}-bound)")
         print(f"engine-smoke OK: batched+sharded+scan+sharded_scan+pipelined, "
               f"acc={res_bat.final_accuracy:.3f}, scan {speedup:.2f}x batched, "
               f"fedcom scan {speedup_c:.2f}x batched, "

@@ -5,31 +5,86 @@ prints one row per (arch x shape x mesh): the three roofline terms, the
 dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and bytes/device.
 
 Run:
-    PYTHONPATH=src python -m repro.launch.dryrun --all  # once, ~minutes
-    PYTHONPATH=src python -m benchmarks.roofline        # seconds (reads JSON)
+    PYTHONPATH=src python -m repro.launch.dryrun --all       # once, ~minutes
+    PYTHONPATH=src python -m benchmarks.roofline             # seconds (JSON)
+    PYTHONPATH=src python -m benchmarks.roofline --measure   # + measured row
+
+``--measure`` appends one MEASURED row grounding the analytic table: the
+tiny federated-transformer job (the same configuration as the ``transformer``
+engine-smoke leg) actually runs through ``driver="scan", engine="sharded"``
+and its steady-state per-round wall is reported via
+``benchmarks.common.per_round_wall`` — the first chunk (the one compile) is
+excluded, and all durations come from ``time.perf_counter()`` (FLC005).
 
 Unlike the fig/table benchmarks this reproduces no single paper figure; it
 is the scale-out companion (DESIGN.md §5/§6): per-architecture compute /
 memory / collective roofline terms for the sharded engine's mesh configs.
-The drivers are irrelevant here — no federated rounds execute.
+The analytic rows execute no federated rounds; only ``--measure`` does.
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+import time
 
-from benchmarks.common import csv_row
+try:
+    from benchmarks.common import csv_row, per_round_wall
+except ImportError:
+    # invoked as `python benchmarks/roofline.py`: put the repo root on sys.path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.common import csv_row, per_round_wall
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
 
 
-def main() -> list:
+def measured_transformer_row(chunk: int = 4) -> str:
+    """Run the tiny federated transformer and time its steady-state rounds.
+
+    Two chunks of ``chunk`` rounds; ``per_round_wall(res, chunk)`` drops the
+    first chunk — the scan driver compiles its whole-chunk program exactly
+    once, there — so the row reports compile-free steady state, matching the
+    warmup discipline every figure benchmark shares.
+    """
+    import jax
+
+    from repro.configs.base import ATTN_GLOBAL, ArchConfig
+    from repro.data import make_federated_lm
+    from repro.fl import run_federated
+    from repro.fl.baselines import FedAvg
+    from repro.models import LMClassifier
+
+    seq, vocab = 8, 64
+    cfg = ArchConfig(
+        name="tiny-lm", family="bench", num_layers=2, d_model=16,
+        num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=vocab,
+        pattern=(ATTN_GLOBAL,), dtype="float32",
+    )
+    model = LMClassifier(cfg, seq_len=seq)
+    ds = make_federated_lm(num_clients=8, samples_per_client=32,
+                           seq_len=seq, vocab_size=vocab, num_eval=32)
+    t0 = time.perf_counter()
+    res = run_federated(
+        model, ds, FedAvg(8, 4, 1, seed=0),
+        max_rounds=2 * chunk, learning_rate=0.05, batch_size=32, seed=0,
+        engine="sharded", driver="scan", scan_chunk_rounds=chunk,
+    )
+    wall = time.perf_counter() - t0
+    spr = per_round_wall(res, warmup_rounds=chunk)
+    return csv_row(
+        "roofline_transformer_measured", spr * 1e6,
+        f"wall_s={wall:.2f};rounds={res.rounds_run};"
+        f"devices={jax.device_count()};driver=scan;engine=sharded",
+    )
+
+
+def main(measure: bool = False) -> list:
     rows = []
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     if not files:
-        return [csv_row("roofline_missing", 0.0,
-                        "run `python -m repro.launch.dryrun --all` first")]
+        rows.append(csv_row("roofline_missing", 0.0,
+                            "run `python -m repro.launch.dryrun --all` first"))
     for path in files:
         with open(path) as f:
             d = json.load(f)
@@ -49,8 +104,10 @@ def main() -> list:
             f"useful_flops_frac={r['useful_flops_fraction']:.3f};"
             f"hbm_gib_dev={r.get('peak_hbm_gib_per_device') or 0:.2f}",
         ))
+    if measure:
+        rows.append(measured_transformer_row())
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    print("\n".join(main(measure="--measure" in sys.argv[1:])))

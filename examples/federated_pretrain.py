@@ -7,27 +7,28 @@ with FLrce server-side control (the framework-scale version of the paper).
     # ~100M-param model, a few hundred local steps total (CPU: hours)
     PYTHONPATH=src python examples/federated_pretrain.py --size 100m --rounds 25
 
-Each silo draws from its own topic-skewed Zipf-Markov token stream, runs
-local SGD steps, and ships its delta; the server does Eq. 4 aggregation,
-relationship modeling over the deltas (Alg. 1), explore/exploit selection
-(Alg. 2), and the conflict-based early stop (Alg. 3).
+Each silo draws from its own topic-skewed Zipf-Markov token stream; the
+whole job runs through ``run_federated(driver="scan", engine="sharded")`` —
+the compiled path: local SGD, Eq. 4 aggregation, relationship modeling over
+the deltas (Alg. 1), explore/exploit selection (Alg. 2) and the
+conflict-based early stop (Alg. 3) all execute inside one ``lax.scan``
+chunk program per ``--chunk`` rounds, shard_mapped over the composed
+``(data, model)`` mesh (a ``(1, 1)`` mesh on a single device; force 8 with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  The model-axis
+sharding comes from ``sharding/policy.py`` via ``LMClassifier.param_specs``.
 """
 import argparse
-import dataclasses
 import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ATTN_GLOBAL, ArchConfig
-from repro.core.distributed import flatten_pytree
-from repro.core.server import FLrceServer
-from repro.data import SiloTokenStream
-from repro.fl.aggregation import aggregation_weights
-from repro.models import TransformerLM
-from repro.optim import apply_updates, sgd
+from repro.data import make_federated_lm
+from repro.fl import FLrce, run_federated
+from repro.models import LMClassifier
+from repro.models.cnn import param_count
 
 SIZES = {
     # name: (layers, d_model, heads, d_ff, vocab) — approx param counts
@@ -56,68 +57,53 @@ def main() -> None:
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=4)
     ap.add_argument("--lr", type=float, default=0.1)
     ap.add_argument("--psi", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = make_cfg(args.size)
-    model = TransformerLM(cfg, remat=True)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    dim = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    model = LMClassifier(cfg, seq_len=args.seq)
+    dim = param_count(model.init(jax.random.PRNGKey(args.seed)))
     print(f"[fedlm] {cfg.name}: {dim:,} params, {args.silos} silos, "
-          f"{args.participants}/round, {args.rounds} rounds")
-    stream = SiloTokenStream(cfg.vocab_size, args.silos, alpha=0.25, seed=args.seed)
+          f"{args.participants}/round, {args.rounds} rounds, "
+          f"{jax.device_count()} device(s)")
+
+    # one local epoch over batch*local_steps samples/silo = --local-steps
+    # SGD steps per selected silo per round, as in the hand-rolled loop
+    ds = make_federated_lm(
+        num_clients=args.silos, samples_per_client=args.batch * args.local_steps,
+        seq_len=args.seq, vocab_size=cfg.vocab_size, num_eval=8 * args.batch,
+        alpha=0.25, seed=args.seed,
+    )
     psi = args.psi if args.psi is not None else args.participants / 2
-    server = FLrceServer(args.silos, dim, args.participants, es_threshold=psi,
-                         explore_decay=0.85, seed=args.seed)
-    optimizer = sgd(args.lr)
+    strategy = FLrce(args.silos, args.participants, 1, dim=dim,
+                     es_threshold=psi, explore_decay=0.85, seed=args.seed)
 
-    @jax.jit
-    def local_step(p, o, tokens):
-        batch = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
-        loss, grads = jax.value_and_grad(model.loss)(p, batch)
-        upd, o = optimizer.update(grads, o, p)
-        return apply_updates(p, upd), o, loss
+    t0 = time.perf_counter()
+    res = run_federated(
+        model, ds, strategy,
+        max_rounds=args.rounds, learning_rate=args.lr, batch_size=args.batch,
+        seed=args.seed, engine="sharded", driver="scan",
+        scan_chunk_rounds=args.chunk,
+    )
+    wall = time.perf_counter() - t0
 
-    total_steps = 0
-    for t in range(args.rounds):
-        t0 = time.perf_counter()
-        ids = server.select()
-        w_before, unflatten = flatten_pytree(params)
-        deltas, losses = [], []
-        for silo in ids:
-            local = params
-            o = optimizer.init(local)
-            for step in range(args.local_steps):
-                toks = jnp.asarray(
-                    stream.batch(int(silo), args.batch, args.seq, step=t * 1000 + step)
-                )
-                local, o, loss = local_step(local, o, toks)
-                total_steps += 1
-            losses.append(float(loss))
-            d, _ = flatten_pytree(local)
-            deltas.append(d - w_before)
-        upd = jnp.stack(deltas)
-        weights = jnp.asarray(aggregation_weights([1.0] * len(ids)))
-        params = unflatten(w_before + weights @ upd)
-        server.ingest(w_before, ids, upd)
-        stop = server.check_early_stop(upd)
-        server.advance_round()
+    for rec in res.records:
         print(json.dumps({
-            "round": t, "silos": [int(i) for i in ids],
-            "mean_loss": round(float(np.mean(losses)), 4),
-            "conflicts": round(server.state.last_conflicts, 3),
-            "exploit": server.last_round_was_exploit,
-            "wall_s": round(time.perf_counter() - t0, 1),
+            "round": rec.t, "silos": [int(i) for i in rec.selected],
+            "accuracy": round(float(rec.accuracy), 4),
+            "mean_loss": round(float(rec.mean_client_loss), 4),
+            "exploit": bool(rec.exploited), "stopped": bool(rec.stopped),
         }))
-        if stop:
-            print(f"[fedlm] early stop at round {t} "
-                  f"(conflicts={server.state.last_conflicts:.2f} >= psi={psi}) — "
-                  f"saved {args.rounds - t - 1} rounds")
-            break
-    print(f"[fedlm] done: {total_steps} local steps, final mean loss "
-          f"{float(np.mean(losses)):.4f}")
+    if res.stopped_early:
+        print(f"[fedlm] early stop at round {res.rounds_run - 1} "
+              f"(psi={psi}) — saved {args.rounds - res.rounds_run} rounds")
+    print(f"[fedlm] done: {res.rounds_run} rounds in {wall:.1f}s "
+          f"({res.driver_stats.get('compiles_chunk', '?')} chunk compile(s)), "
+          f"next-token acc {float(res.final_accuracy):.4f}, "
+          f"uploaded {res.ledger.bytes_up / 2**20:.1f} MiB")
 
 
 if __name__ == "__main__":

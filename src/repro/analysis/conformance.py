@@ -22,6 +22,10 @@ statically and across files:
 6. An explicit ``supports_paged_store = True`` with resolved
    ``supports_scan`` False is contradictory — the paged store only exists
    under the chunked drivers.
+7. An explicit ``supports_param_subset = False`` (the strategy refuses
+   adapter-style models, e.g. LoRA) must carry a machine-readable
+   ``param_subset_reason`` string — same discipline as check 5, so the
+   support matrix can render *why* the full parameter vector is needed.
 """
 from __future__ import annotations
 
@@ -37,11 +41,17 @@ from repro.analysis.base import (
     dotted_name,
 )
 
-_SUPPORT_ATTRS = ("supports_scan", "supports_sharded_scan", "supports_paged_store")
+_SUPPORT_ATTRS = (
+    "supports_scan",
+    "supports_sharded_scan",
+    "supports_paged_store",
+    "supports_param_subset",
+)
 _ROOT_DEFAULTS = {
     "supports_scan": False,
     "supports_sharded_scan": False,
     "supports_paged_store": True,
+    "supports_param_subset": True,
 }
 _REMOVED_HOOKS = ("process_update", "processes_updates")
 
@@ -52,6 +62,7 @@ class ClassInfo:
     bases: Tuple[str, ...]               # simple (last-segment) base names
     attrs: Dict[str, bool]               # explicit literal support attrs
     fallback_reason: Optional[str]       # explicit literal string, if any
+    param_subset_reason: Optional[str]   # explicit literal string, if any
     methods: Tuple[str, ...]
     sf: SourceFile
     node: ast.ClassDef
@@ -60,6 +71,7 @@ class ClassInfo:
 def _class_info(sf: SourceFile, node: ast.ClassDef) -> ClassInfo:
     attrs: Dict[str, bool] = {}
     fallback: Optional[str] = None
+    ps_reason: Optional[str] = None
     methods: List[str] = []
     for stmt in node.body:
         if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
@@ -80,6 +92,9 @@ def _class_info(sf: SourceFile, node: ast.ClassDef) -> ClassInfo:
         elif target == "fallback_reason" and isinstance(value, ast.Constant) \
                 and isinstance(value.value, str):
             fallback = value.value
+        elif target == "param_subset_reason" and isinstance(value, ast.Constant) \
+                and isinstance(value.value, str):
+            ps_reason = value.value
     bases = []
     for b in node.bases:
         nm = dotted_name(b)
@@ -90,6 +105,7 @@ def _class_info(sf: SourceFile, node: ast.ClassDef) -> ClassInfo:
         bases=tuple(bases),
         attrs=attrs,
         fallback_reason=fallback,
+        param_subset_reason=ps_reason,
         methods=tuple(methods),
         sf=sf,
         node=node,
@@ -209,6 +225,16 @@ class ConformancePass(LintPass):
                     "needs the host loop>\"` (rendered in "
                     "docs/support-matrix.md)",
                 ))
+            if info.attrs.get("supports_param_subset") is False \
+                    and info.param_subset_reason is None:
+                out.append(self.finding(
+                    sf, node,
+                    f"`{info.name}` opts out with supports_param_subset="
+                    "False but has no `param_subset_reason` string",
+                    fixit="add `param_subset_reason = \"<why this strategy "
+                    "needs the full parameter vector>\"` (rendered in "
+                    "docs/support-matrix.md)",
+                ))
             if info.attrs.get("supports_paged_store") is True and not scan:
                 out.append(self.finding(
                     sf, node,
@@ -226,8 +252,8 @@ class ConformancePass(LintPass):
         declarations, the methods that matter to the contract, and the
         machine-readable fallback reason (satellite of FLC006 check 5)."""
         lines = [
-            "| strategy | scan | sharded_scan | paged | overrides | fallback_reason |",
-            "| --- | --- | --- | --- | --- | --- |",
+            "| strategy | scan | sharded_scan | paged | param_subset | overrides | reason |",
+            "| --- | --- | --- | --- | --- | --- | --- |",
         ]
         interesting = ("update_transform", "post_round", "scan_program",
                        "propose_candidates")
@@ -235,11 +261,13 @@ class ConformancePass(LintPass):
             scan = self._resolved(info.name, "supports_scan")
             sharded = self._resolved(info.name, "supports_sharded_scan")
             paged = self._resolved(info.name, "supports_paged_store")
+            subset = self._resolved(info.name, "supports_param_subset")
             overrides = ", ".join(m for m in interesting if m in info.methods) or "—"
-            reason = info.fallback_reason or "—"
+            reason = info.fallback_reason or info.param_subset_reason or "—"
             lines.append(
                 f"| `{info.name}` | {'yes' if scan else 'no'} | "
                 f"{'yes' if sharded else 'no'} | {'yes' if paged else 'no'} | "
+                f"{'yes' if subset else 'no'} | "
                 f"{overrides} | {reason} |"
             )
         return "\n".join(lines)

@@ -22,6 +22,7 @@ from repro.data.synthetic import (
     make_federated_classification,
     make_image_like,
 )
+from repro.data.lm import make_federated_lm
 from repro.data.tokens import SiloTokenStream
 
 __all__ = [
@@ -43,5 +44,6 @@ __all__ = [
     "make_classification",
     "make_federated_classification",
     "make_image_like",
+    "make_federated_lm",
     "SiloTokenStream",
 ]

@@ -28,6 +28,11 @@ class Dropout(Strategy):
     # pure (t, cid) masks + base host-RNG selection: the scan driver
     # precomputes the selected cohort's masks per chunk
     supports_scan = True
+    # the Bernoulli sub-model mask is defined over the FULL weight tensors;
+    # over a bag of LoRA factors it would zero adapter coordinates, which is
+    # not the paper's sub-model semantics
+    supports_param_subset = False
+    param_subset_reason = "sub-model masks presume the full weight tensors"
 
     def __init__(self, *args, keep_rate: float = 0.5, **kwargs):
         super().__init__(*args, **kwargs)

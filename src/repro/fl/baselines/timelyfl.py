@@ -18,6 +18,11 @@ class TimelyFL(Strategy):
     # function of cid and the scan driver precomputes each chunk's per-leaf
     # freeze flags alongside the host-drawn selections
     supports_scan = True
+    # depth-indexed layer freezing orders the FULL model's leaves front to
+    # back; an adapter pytree's leaf order has no depth meaning, so the
+    # freeze plan would be nonsense over a param subset
+    supports_param_subset = False
+    param_subset_reason = "layer freezing is depth-indexed over the full model"
 
     def __init__(self, *args, min_capability: float = 0.3, epoch_fraction: float = 0.6, **kwargs):
         super().__init__(*args, **kwargs)

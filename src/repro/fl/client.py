@@ -441,6 +441,14 @@ class ShardedCohortTrainer(BatchedCohortTrainer):
         self.data_axis = data_axis
         self.axes = tuple(mesh.axis_names)
         self.num_shards = mesh_axes_size(mesh, self.axes)
+        # model-axis composition: a model that publishes ``param_specs(mesh)``
+        # (the sharding-policy layouts — e.g. LMClassifier) trains under GSPMD
+        # partitioning with its params pinned model-sharded instead of
+        # shard_map-replicated, so a model too big for one device still runs
+        # sharded cohort rounds.  ``None`` keeps the replicated shard_map path.
+        self.param_shardings = (
+            model.param_specs(mesh) if hasattr(model, "param_specs") else None
+        )
         self._sharded_raw_cache: Dict[Tuple[bool, bool], Any] = {}
         self._sharded_train_cache: Dict[Tuple[bool, bool], Any] = {}
         self._reshard_cache: Dict[Tuple[int, int, int], Any] = {}
@@ -454,23 +462,68 @@ class ShardedCohortTrainer(BatchedCohortTrainer):
         self.reshard_cache_misses = 0
 
     def _sharded_train_raw(self, use_prox: bool, has_mask: bool):
-        """The bare shard_mapped cohort program (not jitted) — the form the
-        compiled round chunks trace straight into their scan body."""
+        """The bare mesh cohort program (not jitted) — the form the compiled
+        round chunks trace straight into their scan body.
+
+        Replicated-model path: shard_map the cohort program over ``data``
+        (params replicated per shard).  Model-sharded path (the model
+        publishes ``param_specs``): the SAME cohort program, partitioned by
+        GSPMD instead — params pinned to the policy's (data, model) layouts,
+        batch tensors pinned client-sharded over ``data`` — so the params are
+        never materialized replicated on any device.
+        """
         key = (use_prox, has_mask)
         if key not in self._sharded_raw_cache:
-            from jax.sharding import PartitionSpec as P
-            from repro.core.distributed import _shard_map
-
             train = functools.partial(
                 self._make_train(), use_prox=use_prox, has_mask=has_mask
             )
-            dspec = P(self.data_axis)
-            in_specs = (P(), dspec, dspec, dspec, dspec, dspec, dspec, dspec)
-            out_specs = (dspec, P(self.data_axis, None), dspec)
-            self._sharded_raw_cache[key] = _shard_map(
-                train, self.mesh, in_specs, out_specs
-            )
+            if self.param_shardings is not None:
+                self._sharded_raw_cache[key] = self._gspmd_train(train)
+            else:
+                from jax.sharding import PartitionSpec as P
+                from repro.core.distributed import _shard_map
+
+                dspec = P(self.data_axis)
+                in_specs = (P(), dspec, dspec, dspec, dspec, dspec, dspec, dspec)
+                out_specs = (dspec, P(self.data_axis, None), dspec)
+                self._sharded_raw_cache[key] = _shard_map(
+                    train, self.mesh, in_specs, out_specs
+                )
         return self._sharded_raw_cache[key]
+
+    def _gspmd_train(self, train):
+        """GSPMD-partitioned cohort training for a model-sharded model.
+
+        ``with_sharding_constraint`` pins every param leaf to the sharding
+        policy's layout and the (client-padded) plan tensors client-sharded
+        over ``data``; XLA partitions the vmap/scan cohort program across the
+        composed (data, model) mesh.  The flat update matrix leaves in the
+        shard_map path's row-sharded layout, so :meth:`reshard_rows_traced`
+        and everything downstream are shared verbatim with the replicated
+        path.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh, da = self.mesh, self.data_axis
+        pshard = self.param_shardings
+        wsc = jax.lax.with_sharding_constraint
+
+        def pin_rows(t: jax.Array) -> jax.Array:
+            return wsc(t, NamedSharding(mesh, P(da, *([None] * (t.ndim - 1)))))
+
+        def run(global_params, xs, ys, ws, valid, mask, freeze, prox_mu):
+            gp = jax.tree_util.tree_map(wsc, global_params, pshard)
+            xs, ys, ws, valid = (pin_rows(t) for t in (xs, ys, ws, valid))
+            mask = jax.tree_util.tree_map(pin_rows, mask)
+            prox_mu = pin_rows(prox_mu)
+            updates, flat, losses = train(
+                gp, xs, ys, ws, valid, mask, freeze, prox_mu
+            )
+            flat = pin_rows(flat)
+            losses = pin_rows(losses)
+            return updates, flat, losses
+
+        return run
 
     def _sharded_train(self, use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)

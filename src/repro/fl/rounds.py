@@ -261,6 +261,18 @@ def run_federated(
             "client_store='paged' is the scan driver's host-paged store; it "
             f"has no meaning for driver={driver!r} (pass driver='scan')"
         )
+    if getattr(model, "param_subset", False) and not strategy.supports_param_subset:
+        # adapter-style models train a parameter SUBSET; a strategy whose
+        # variants presume the full vector (dropout masks, depth-indexed
+        # freezing) would silently operate on meaningless coordinates
+        reason = getattr(strategy, "param_subset_reason", None)
+        raise ValueError(
+            f"{strategy.name} does not support param-subset models like "
+            f"{getattr(model, 'name', type(model).__name__)} "
+            "(supports_param_subset is False"
+            + (f": {reason}" if reason else "")
+            + "); see docs/writing-a-strategy.md"
+        )
     if async_rounds is not None:
         from repro.fl.async_rounds import AsyncConfig
 

@@ -116,6 +116,14 @@ from repro.models.cnn import param_count
 
 PyTree = Any
 
+# Roofline instrumentation hook: when a list is installed here (see
+# ``benchmarks/engine.py``), ``_ChunkRunner.run_chunk`` appends the compiled
+# chunk program's post-partitioning HLO text on every cache miss.  Lowering
+# for capture costs one extra XLA compile, so the hook must stay ``None``
+# during any run whose ``compiles_chunk == 1`` sentinel is asserted — capture
+# runs are separate, unasserted jobs.
+_hlo_capture: Optional[List[str]] = None
+
 
 def _tree_where(pred, on_true, on_false):
     """Leafwise select with a scalar predicate (freezes the carry post-stop)."""
@@ -206,6 +214,7 @@ class _ChunkRunner:
         eval_every, max_rounds = self.eval_every, self.max_rounds
         eval_x, eval_y, model = self.eval_x, self.eval_y, self.model
         sizes_f = self._sizes_f
+        eval_params = self.unflatten
         if mesh is None:
             train = self._train_raw
         else:
@@ -215,6 +224,16 @@ class _ChunkRunner:
             train_sharded = trainer._sharded_train_raw(use_prox, has_mask)
             axes, p_pad = self.axes, self.p_pad
             rep_sharding = NamedSharding(mesh, P())
+            # model-axis composition: the eval-time params of a model-sharded
+            # model are pinned to the policy layouts too, so the chunk never
+            # materializes a replicated copy of the full model
+            param_shardings = trainer.param_shardings
+            if param_shardings is not None:
+                def eval_params(wv):
+                    return jax.tree_util.tree_map(
+                        jax.lax.with_sharding_constraint,
+                        unflatten(wv), param_shardings,
+                    )
 
         def body_with(cand, page_x, page_y, page_sizes):
             """The scan body, closed over this chunk's candidate remap.
@@ -413,7 +432,7 @@ class _ChunkRunner:
                 )
                 acc = jax.lax.cond(
                     evaluated,
-                    lambda wv: model.accuracy(unflatten(wv), eval_x, eval_y).astype(jnp.float32),
+                    lambda wv: model.accuracy(eval_params(wv), eval_x, eval_y).astype(jnp.float32),
                     lambda wv: last_acc,
                     w_new,
                 )
@@ -480,6 +499,12 @@ class _ChunkRunner:
     def run_chunk(self, w, sc, abuf, stopped, last_acc, cand, page, xs,
                   use_prox: bool, has_mask: bool):
         key = (use_prox, has_mask)
+        if self.paged:
+            page_x, page_y, page_sizes = page
+            args = (w, sc, abuf, stopped, last_acc, cand, page_x, page_y,
+                    page_sizes, xs)
+        else:
+            args = (w, sc, abuf, stopped, last_acc, cand, xs)
         if key not in self._cache:
             shardings = None
             if self.mesh is not None:
@@ -487,13 +512,19 @@ class _ChunkRunner:
                     lambda l: l.sharding, (w, sc, abuf, stopped, last_acc)
                 )
             self._cache[key] = self._build(use_prox, has_mask, shardings)
-        if self.paged:
-            page_x, page_y, page_sizes = page
-            return self._cache[key](
-                w, sc, abuf, stopped, last_acc, cand, page_x, page_y,
-                page_sizes, xs
-            )
-        return self._cache[key](w, sc, abuf, stopped, last_acc, cand, xs)
+            if _hlo_capture is not None:
+                # roofline capture: the post-partitioning (per-device) HLO of
+                # the compiled chunk.  Donation is ignored for the side
+                # lowering, so the live carry stays valid for the real call
+                # below; the extra compile is why capture runs are never
+                # compile-sentinel-asserted.
+                _hlo_capture.append(
+                    self._cache[key]
+                    .lower(*args)
+                    .compile()
+                    .as_text()
+                )
+        return self._cache[key](*args)
 
 
 @dataclasses.dataclass

@@ -238,6 +238,31 @@ class Strategy:
     ``run_federated``'s async validation (see ``docs/support-matrix.md``).
     """
 
+    supports_param_subset: bool = True
+    """True ⇒ this strategy is sound when the trained pytree is a PARAMETER
+    SUBSET of the deployed model — e.g. :class:`repro.models.lora.LoRAClassifier`
+    adapters (``model.param_subset`` is True), where clients train and upload
+    only O(rank·(d_in+d_out)) factors and the full model exists solely at
+    merge/eval time.
+
+    The base strategies get this for free: selection, Eq. 4 aggregation,
+    FLrce's V/A relationship maps and the ES check are all defined on
+    whatever flat vector :func:`repro.core.distributed.flatten_pytree` gives
+    them, and the resource ledger charges ``param_count`` of the TRAINED
+    pytree — so the adapter regime needs no engine or strategy changes.
+
+    Declare False when the strategy's per-client variant semantics presume
+    the full parameter vector — Dropout's sub-model masks and TimelyFL's
+    depth-indexed layer freezing are meaningless over a bag of adapter
+    factors — and set ``param_subset_reason`` to say why.
+    ``run_federated`` rejects a param-subset model × non-supporting strategy
+    at validation time (see docs/writing-a-strategy.md)."""
+
+    param_subset_reason: Optional[str] = None
+    """Machine-readable one-liner required by FLC006 whenever
+    ``supports_param_subset`` is explicitly declared False: *why* this
+    strategy needs the full parameter vector."""
+
     fallback_reason: Optional[str] = None
     """Machine-readable one-liner for strategies that opt OUT of the
     compiled path (``supports_scan = False``): *why* this strategy needs

@@ -39,8 +39,9 @@ END_MARKER = "<!-- END GENERATED MATRIX -->"
 _HEADER = (
     "| Strategy | `driver=\"loop\"` (sequential / batched / sharded) | "
     "`driver=\"scan\"` (engine=batched) | `driver=\"scan\"` (engine=sharded) | "
-    "`client_store=\"paged\"` | `async_rounds=` | Device update transform |\n"
-    "| --- | --- | --- | --- | --- | --- | --- |"
+    "`client_store=\"paged\"` | `async_rounds=` | Adapters (param subset) | "
+    "Device update transform |\n"
+    "| --- | --- | --- | --- | --- | --- | --- | --- |"
 )
 
 
@@ -72,6 +73,13 @@ def _sharded_scan_cell(cls: Type[Strategy]) -> str:
     )
 
 
+def _param_subset_cell(cls: Type[Strategy]) -> str:
+    # adapter-style models (LoRAClassifier: model.param_subset is True) train
+    # a parameter subset; strategies whose variants presume the full vector
+    # opt out and are rejected by run_federated with their declared reason
+    return "✓" if cls.supports_param_subset else "—"
+
+
 def _transform_cell(cls: Type[Strategy]) -> str:
     return "yes" if cls.update_transform is not Strategy.update_transform else "—"
 
@@ -84,7 +92,8 @@ def render_support_matrix() -> str:
         rows.append(
             f"| `{cls.name}` | ✓ / ✓ / ✓ | {_scan_cell(cls)} | "
             f"{_sharded_scan_cell(cls)} | {_paged_cell(cls)} | "
-            f"{_async_cell(cls)} | {_transform_cell(cls)} |"
+            f"{_async_cell(cls)} | {_param_subset_cell(cls)} | "
+            f"{_transform_cell(cls)} |"
         )
     fallbacks = [
         cls for cls in STRATEGY_CLASSES
@@ -99,6 +108,19 @@ def render_support_matrix() -> str:
         rows.extend(
             f"- `{cls.name}`: {cls.fallback_reason}" for cls in fallbacks
         )
+    subset_outs = [
+        cls for cls in STRATEGY_CLASSES
+        if not cls.supports_param_subset and cls.param_subset_reason
+    ]
+    if subset_outs:
+        rows.append("")
+        rows.append(
+            "Full-vector-only strategies (`param_subset_reason` — rejected "
+            "for adapter models like `LoRAClassifier`):"
+        )
+        rows.extend(
+            f"- `{cls.name}`: {cls.param_subset_reason}" for cls in subset_outs
+        )
     return "\n".join(rows)
 
 
@@ -112,6 +134,10 @@ def sharded_scan_capable_names() -> List[str]:
 
 def async_capable_names() -> List[str]:
     return [cls.name for cls in STRATEGY_CLASSES if cls.supports_async]
+
+
+def param_subset_capable_names() -> List[str]:
+    return [cls.name for cls in STRATEGY_CLASSES if cls.supports_param_subset]
 
 
 if __name__ == "__main__":

@@ -1,5 +1,14 @@
 """Model zoo: paper CNNs + the 10 assigned architectures."""
 from repro.models.cnn import MLPClassifier, PaperCNN, param_count
+from repro.models.lm import LMClassifier
+from repro.models.lora import LoRAClassifier
 from repro.models.transformer import TransformerLM
 
-__all__ = ["MLPClassifier", "PaperCNN", "param_count", "TransformerLM"]
+__all__ = [
+    "LMClassifier",
+    "LoRAClassifier",
+    "MLPClassifier",
+    "PaperCNN",
+    "param_count",
+    "TransformerLM",
+]

@@ -1,0 +1,89 @@
+"""Transformer LMs behind the FL classifier protocol.
+
+:class:`LMClassifier` wraps :class:`repro.models.transformer.TransformerLM`
+(any ``ArchConfig`` from ``repro.configs``) so the federated engines — which
+speak the ``ClassifierModel`` protocol of ``loss(params, x, y)`` over
+``(N, *feat)`` float arrays — can train a language model without a special
+code path.  The dataset convention (see
+:func:`repro.data.lm.make_federated_lm`):
+
+* ``x``      — ``(N, L)`` float32 **token ids** (exact for vocab < 2**24;
+               the FL data substrate stacks float32 feature tensors)
+* ``y``      — ``(N,)`` int32: the next token after the sequence (so the
+               final-position prediction doubles as a classification target)
+
+``loss`` supervises every next-token position — labels are
+``[x[1:], y]`` — and ``accuracy`` is top-1 at the final position against
+``y``, which keeps both methods drop-in for the engines' eval plumbing.
+
+The wrapper exposes ``param_specs(mesh)`` delegating to
+``repro.sharding.policy``: when the sharded engines see it, cohort training
+runs GSPMD-partitioned with the params pinned to the policy's ``(data,
+model)`` layout instead of shard_map-replicated — the model-axis composition
+that lets a model too big for one device run sharded(-scan) rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import TransformerLM
+
+
+@dataclasses.dataclass(frozen=True)
+class LMClassifier:
+    """``TransformerLM`` as a federated classifier model.
+
+    ``seq_len`` is the dataset's fixed sequence length — used only by the
+    analytic ``flops_per_sample`` the resource ledger charges (6·N·L for
+    fwd+bwd, active params for MoE).
+    """
+
+    cfg: ArchConfig
+    seq_len: int
+    remat: bool = True
+    name: str = "lm"
+
+    @property
+    def lm(self) -> TransformerLM:
+        return TransformerLM(self.cfg, remat=self.remat)
+
+    def init(self, rng: jax.Array):
+        return self.lm.init(rng)
+
+    def _tokens(self, x: jax.Array) -> jax.Array:
+        # token ids ride in the float32 feature tensor; exact below 2**24
+        return x.astype(jnp.int32)
+
+    def loss(self, params, x: jax.Array, y: jax.Array) -> jax.Array:
+        tokens = self._tokens(x)
+        labels = jnp.concatenate(
+            [tokens[:, 1:], y[:, None].astype(jnp.int32)], axis=1
+        )
+        return self.lm.loss(params, {"tokens": tokens, "labels": labels})
+
+    def accuracy(self, params, x: jax.Array, y: jax.Array) -> jax.Array:
+        lm = self.lm
+        h, _ = lm.hidden(params, {"tokens": self._tokens(x)})
+        logits = lm.unembed(params, h[:, -1, :])
+        return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+    def flops_per_sample(self) -> float:
+        # 6·N FLOPs/token for fwd+bwd (2N fwd, 4N bwd), active params for MoE
+        return 6.0 * self.cfg.active_param_count() * self.seq_len
+
+    def param_specs(self, mesh):
+        """Policy ``NamedSharding`` tree for this model's params on ``mesh``.
+
+        The sharded trainers pin the cohort program's params (and the eval
+        params inside the compiled chunk) to these layouts, composing the
+        model axis with the FL ``data`` axis.  Leaves whose dims do not
+        divide the mesh fall back to replicated inside the policy.
+        """
+        from repro.sharding.policy import param_shardings
+
+        shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return param_shardings(shapes, mesh)

@@ -2,9 +2,17 @@
 from repro.roofline.analysis import (
     CollectiveStats,
     Roofline,
+    fl_round_hbm_bytes,
     model_flops_for,
     parse_collectives,
 )
 from repro.roofline import hw
 
-__all__ = ["CollectiveStats", "Roofline", "model_flops_for", "parse_collectives", "hw"]
+__all__ = [
+    "CollectiveStats",
+    "Roofline",
+    "fl_round_hbm_bytes",
+    "model_flops_for",
+    "parse_collectives",
+    "hw",
+]

@@ -208,6 +208,50 @@ def analytic_hbm_bytes(cfg, shape, chips: int, cache_bytes: float | None = None)
     return total / chips
 
 
+def fl_round_hbm_bytes(
+    cfg,
+    *,
+    seq_len: int,
+    batch: int,
+    local_steps: int,
+    cohort: int,
+    chips: int,
+    data_shards: int | None = None,
+) -> float:
+    """Per-device HBM traffic model for ONE federated round (memory term).
+
+    The FL engines train in fp32 SGD, not bf16 AdamW, so the per-step param
+    traffic differs from :func:`analytic_hbm_bytes`'s pretraining model:
+
+    step    : params read + grads write/read + params write = 5 passes
+              x 4 B = 20 B/param, + the same ~12 residual-sized activation
+              passes/layer (remat fwd, recompute, bwd) in fp32.
+    round   : ``cohort`` clients each run ``local_steps`` such steps inside
+              the one vmapped cohort program (per-step activation rows are
+              ``batch`` samples per client).
+
+    On a composed ``(data, model)`` mesh the two terms partition differently
+    (which the measured HLO side reflects too): the param/grad state is
+    sharded over ALL ``chips`` by the sharding policy, while the activation
+    rows are sharded over the ``data`` axis only and REPLICATED across the
+    model axis — so activation traffic divides by ``data_shards``, not
+    ``chips``.  ``data_shards=None`` means pure data parallelism
+    (``data_shards == chips``).
+
+    Same fusion-pessimism rationale as :func:`analytic_hbm_bytes`: the CPU
+    backend's ``bytes accessed`` is useless here, so the roofline memory
+    term is this explicit model and the HLO dot FLOPs are the measured side.
+    """
+    n_data = chips if data_shards is None else data_shards
+    n_params = cfg.param_count()
+    per_step_params = 20.0 * n_params * cohort / chips
+    per_step_act = (
+        12.0 * cfg.num_layers * cohort * batch * seq_len * cfg.d_model * 4.0
+        / n_data
+    )
+    return local_steps * (per_step_params + per_step_act)
+
+
 def model_flops_for(cfg, shape) -> float:
     """6*N*D rule (active params for MoE); decode shapes process 1 token/seq."""
     n_active = cfg.active_param_count()

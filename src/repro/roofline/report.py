@@ -1,6 +1,14 @@
 """Render the EXPERIMENTS.md roofline table from results/dryrun/*.json.
 
     PYTHONPATH=src python -m repro.roofline.report [--mesh 16x16]
+
+When ``results/BENCH_engine.json`` exists (written by
+``python benchmarks/engine.py --smoke``), a measured federated-transformer
+section follows the analytic table: the ``transformer`` leg's steady-state
+per-round wall (compile excluded by ``benchmarks.common.per_round_wall`` —
+its ``s_per_round`` drops the first chunk, the one that compiles; all
+benchmark durations come from ``time.perf_counter``) next to the measured
+vs expected FLOP/B of the compiled chunk around the hardware ridge.
 """
 from __future__ import annotations
 
@@ -8,9 +16,15 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, Optional
 
-DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+DRYRUN_DIR = os.path.join(_ROOT, "results", "dryrun")
+# engine.py --out defaults to the invoking cwd (the repo root in CI)
+BENCH_ENGINE_CANDIDATES = (
+    os.path.join(_ROOT, "BENCH_engine.json"),
+    os.path.join(_ROOT, "results", "BENCH_engine.json"),
+)
 
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
 
@@ -83,14 +97,56 @@ def summary_stats(rows: List[Dict]) -> Dict:
     return {"bottleneck_counts": counts, "worst_mfu": worst, "most_collective_bound": most_coll}
 
 
+def load_measured(path: Optional[str] = None) -> Optional[Dict]:
+    """The measured federated-transformer roofline from BENCH_engine.json.
+
+    Returns ``None`` when the benchmark has not run (or has no
+    ``transformer`` leg).  ``s_per_round`` is steady state: engine.py times
+    every leg through ``benchmarks.common.per_round_wall`` with the chunk
+    size as warmup, so the one chunk compile is excluded.
+    """
+    paths = [path] if path else list(BENCH_ENGINE_CANDIDATES)
+    for p in paths:
+        if not p or not os.path.exists(p):
+            continue
+        with open(p) as f:
+            d = json.load(f)
+        leg = d.get("engines", {}).get("transformer")
+        roof = d.get("transformer_roofline")
+        if not leg or not roof:
+            continue
+        return {"s_per_round": leg["s_per_round"], "devices": d.get("devices"), **roof}
+    return None
+
+
+def measured_table(m: Dict) -> str:
+    return "\n".join([
+        "| arch | devices | s/round (measured, compile excluded) "
+        "| FLOP/B measured | FLOP/B expected | ridge | bottleneck |",
+        "|---|---|---|---|---|---|---|",
+        f"| {m['arch']} | {m['devices']} | {_fmt_s(m['s_per_round'])} "
+        f"| {m['flop_per_byte_measured']:.1f} "
+        f"| {m['flop_per_byte_expected']:.1f} "
+        f"| {m['ridge_flop_per_byte']:.1f} | **{m['bottleneck']}** |",
+    ])
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--bench", default=None,
+                    help="BENCH_engine.json path for the measured section")
     args = ap.parse_args()
     rows = load_rows(args.mesh)
     print(markdown_table(rows))
     print()
     print(json.dumps(summary_stats(rows), indent=1, default=str))
+    measured = load_measured(args.bench)
+    if measured is not None:
+        print()
+        print("## Measured federated transformer round (BENCH_engine.json)")
+        print()
+        print(measured_table(measured))
 
 
 if __name__ == "__main__":

@@ -87,6 +87,20 @@ def test_async_support_axis():
         assert not cls.supports_async, cls.name
 
 
+def test_param_subset_support_axis():
+    """Adapter models (LoRA): everything except the two strategies whose
+    variants presume the full parameter vector, each of which carries a
+    machine-readable reason (enforced statically by FLC006 check 7)."""
+    from repro.fl.support_matrix import param_subset_capable_names
+
+    assert param_subset_capable_names() == [
+        "flrce", "fedavg", "fedcom", "fedprox", "pyramidfl", "quantized8",
+    ]
+    for cls in (Dropout, TimelyFL):
+        assert not cls.supports_param_subset, cls.name
+        assert isinstance(cls.param_subset_reason, str) and cls.param_subset_reason
+
+
 # ---------------------------------------------------------------------------
 # docs/writing-a-strategy.md worked example passes the equivalence harness
 # ---------------------------------------------------------------------------

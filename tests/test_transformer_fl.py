@@ -1,0 +1,155 @@
+"""Model×data mesh composition: federated transformer rounds (tentpole).
+
+A tiny ``ArchConfig`` transformer runs through ``LMClassifier`` on every
+engine — sequential ≡ batched ≡ sharded(loop) ≡ sharded(scan) — on the
+degenerate (1, 1) auto mesh (runs everywhere) and on a real (2, 4)
+composed ``(data, model)`` mesh (8 virtual CPU devices). On the mesh,
+``LMClassifier.param_specs`` (the ``sharding/policy.py`` specs) pins every
+weight matrix over the ``model`` axis via GSPMD while cohort rows split
+over ``data``; the sharded loop and the sharded chunk program execute the
+same math, so their FINAL PARAMETERS must be bit-identical — only the
+eval-side accuracy is allowed a one-sample argmax-tie flip (the tiny
+model's top-2 logit margins sit at fp32 noise).
+
+The chunk must compile exactly once (``compiles_chunk`` sentinel): the
+model-axis sharding may not cost the pinned-layout discipline.
+"""
+import jax
+import numpy as np
+import pytest
+
+from equivalence import assert_runs_equivalent
+from repro.configs.base import ATTN_GLOBAL, ArchConfig
+from repro.data import make_federated_lm
+from repro.fl import FLrce, run_federated
+from repro.fl.baselines import FedAvg
+from repro.launch.mesh import make_debug_mesh
+from repro.models import LMClassifier
+from repro.models.cnn import param_count
+
+MULTI = jax.device_count() >= 8
+
+# one evaluation sample flipping on an argmax tie moves accuracy by
+# 1/num_eval; allow exactly one flip between differently-compiled programs
+NUM_EVAL = 32
+ACC_ATOL = 1.1 / NUM_EVAL
+
+
+def needs8(fn):
+    skip = pytest.mark.skipif(
+        not MULTI,
+        reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+    )
+    return pytest.mark.multidevice(skip(fn))
+
+
+SEQ, VOCAB = 8, 64
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    # every dim divisible on the (2, 4) mesh: d_model=16 over model=4,
+    # heads=2, d_ff=32, vocab=64; cohort P=4 over data=2
+    cfg = ArchConfig(
+        name="tiny-lm", family="test", num_layers=2, d_model=16,
+        num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+        pattern=(ATTN_GLOBAL,), dtype="float32",
+    )
+    model = LMClassifier(cfg, seq_len=SEQ)
+    ds = make_federated_lm(
+        num_clients=8, samples_per_client=32, seq_len=SEQ,
+        vocab_size=VOCAB, num_eval=NUM_EVAL, seed=0,
+    )
+    return model, ds
+
+
+def _run(model, ds, *, engine, driver="loop", mesh=None, strategy=None,
+         rounds=4, chunk=2):
+    strategy = strategy or FedAvg(8, 4, 1, seed=0)
+    kw = {"mesh": mesh} if mesh is not None else {}
+    return run_federated(
+        model, ds, strategy, max_rounds=rounds, learning_rate=0.05,
+        batch_size=32, seed=0, engine=engine, driver=driver,
+        scan_chunk_rounds=chunk, **kw,
+    )
+
+
+def _assert_params_bitwise(a, b):
+    for pa, pb in zip(jax.tree_util.tree_leaves(a.final_params),
+                      jax.tree_util.tree_leaves(b.final_params)):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# ---------------------------------------------------------------------------
+# single device / (1, 1) auto mesh
+# ---------------------------------------------------------------------------
+def test_sequential_matches_batched(tiny_lm):
+    model, ds = tiny_lm
+    seq = _run(model, ds, engine="sequential", rounds=3)
+    bat = _run(model, ds, engine="batched", rounds=3)
+    assert_runs_equivalent(seq, bat, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+
+
+def test_batched_matches_sharded_default_mesh(tiny_lm):
+    model, ds = tiny_lm
+    bat = _run(model, ds, engine="batched", rounds=3)
+    shd = _run(model, ds, engine="sharded", rounds=3)
+    assert_runs_equivalent(bat, shd, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+
+
+def test_sharded_scan_default_mesh_compiles_once(tiny_lm):
+    model, ds = tiny_lm
+    loo = _run(model, ds, engine="sharded")
+    scn = _run(model, ds, engine="sharded", driver="scan")
+    assert scn.driver_stats["compiles_chunk"] == 1
+    assert_runs_equivalent(loo, scn, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+    _assert_params_bitwise(loo, scn)
+
+
+# ---------------------------------------------------------------------------
+# real (2, 4) composed mesh: model axis live
+# ---------------------------------------------------------------------------
+@needs8
+def test_mesh_sharded_loop_matches_batched(tiny_lm):
+    model, ds = tiny_lm
+    mesh = make_debug_mesh(2, 4)
+    bat = _run(model, ds, engine="batched", rounds=3)
+    shd = _run(model, ds, engine="sharded", mesh=mesh, rounds=3)
+    assert_runs_equivalent(bat, shd, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+
+
+@needs8
+def test_mesh_sharded_scan_bitwise_params_and_one_compile(tiny_lm):
+    model, ds = tiny_lm
+    mesh = make_debug_mesh(2, 4)
+    loo = _run(model, ds, engine="sharded", mesh=mesh)
+    scn = _run(model, ds, engine="sharded", driver="scan", mesh=mesh)
+    assert scn.driver_stats["compiles_chunk"] == 1
+    assert_runs_equivalent(loo, scn, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+    # same math, same sharded layout: the final model must be bit-identical
+    _assert_params_bitwise(loo, scn)
+
+
+@needs8
+def test_mesh_flrce_selection_and_ingest(tiny_lm):
+    """FLrce's V/A ingest, Alg. 2 selection and ES all run on the
+    model-sharded layout: the scan chunk reproduces the sharded loop's
+    selection sequence exactly."""
+    model, ds = tiny_lm
+    mesh = make_debug_mesh(2, 4)
+    dim = param_count(model.init(jax.random.PRNGKey(0)))
+    mk = lambda: FLrce(8, 4, 1, dim=dim, es_threshold=3.0, seed=0)
+    loo = _run(model, ds, engine="sharded", mesh=mesh, strategy=mk())
+    scn = _run(model, ds, engine="sharded", driver="scan", mesh=mesh,
+               strategy=mk())
+    assert scn.driver_stats["compiles_chunk"] == 1
+    assert [r.selected for r in loo.records] == \
+           [r.selected for r in scn.records]
+    assert_runs_equivalent(loo, scn, bitwise=False, accuracy_atol=ACC_ATOL,
+                           loss_abs=1e-3)
+    _assert_params_bitwise(loo, scn)
